@@ -1,0 +1,82 @@
+"""Aggregate runs/dryrun/*.json into the §Roofline markdown table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from repro.configs import ARCHS, SHAPES
+
+
+def load(out_dir: str = "runs/dryrun") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        recs.append(json.load(open(path)))
+    return recs
+
+
+def fmt(x, digits=3):
+    if x is None:
+        return "—"
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}e}"
+
+
+def table(out_dir: str = "runs/dryrun", mesh: str = "16x16",
+          verbose: bool = True) -> str:
+    recs = {(r["arch"], r["shape"]): r for r in load(out_dir)
+            if r.get("mesh") == mesh}
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+        "| dominant | MFU@bound | model/HLO flops | mem GiB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | — | — | — | (missing) "
+                             "| — | — | — |")
+                continue
+            if r.get("status") == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | *skipped:"
+                             f" sub-quadratic-only cell* | — | — | — |")
+                continue
+            if r.get("status") == "failed":
+                lines.append(f"| {arch} | {shape} | — | — | — | **FAILED**"
+                             " | — | — | — |")
+                continue
+            ro = r["roofline"]
+            mfu_at_bound = (ro["t_compute_s"] / ro["bound_s"]
+                            if ro["bound_s"] else 0.0)
+            lines.append(
+                f"| {arch} | {shape} | {fmt(ro['t_compute_s'])} | "
+                f"{fmt(ro['t_memory_s'])} | {fmt(ro['t_collective_s'])} | "
+                f"{ro['dominant']} | {mfu_at_bound:.3f} | "
+                f"{r.get('model_vs_hlo_flops', 0):.3f} | "
+                f"{r['memory']['total_nonaliased_gib']:.1f} |")
+    out = "\n".join(lines)
+    if verbose:
+        print(out)
+    return out
+
+
+def summary(out_dir: str = "runs/dryrun", verbose: bool = True) -> dict:
+    recs = load(out_dir)
+    by_status = {}
+    for r in recs:
+        by_status.setdefault(r.get("status", "?"), []).append(
+            (r["arch"], r["shape"], r["mesh"]))
+    if verbose:
+        for k, v in sorted(by_status.items()):
+            print(f"roofline_summary,{k},{len(v)}")
+        for a, s, m in by_status.get("failed", []):
+            print(f"roofline_failed,{a},{s},{m}")
+    return by_status
+
+
+if __name__ == "__main__":
+    table()
+    summary()

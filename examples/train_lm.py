@@ -1,0 +1,35 @@
+"""End-to-end LM training driver (deliverable (b)): trains a reduced
+qwen3-family model for a few hundred steps on whatever devices exist,
+with checkpoints + resume.  On real hardware drop ``--reduced`` and raise
+the batch to train the full ~1.7B config; a ~100M-parameter preset is
+``--arch qwen3-1.7b --d-model-override`` via configs (see README).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--arch", default="qwen3-1.7b")
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+args = ap.parse_args()
+
+history = train_main([
+    "--arch", args.arch, "--reduced",
+    "--steps", str(args.steps),
+    "--batch", str(args.batch),
+    "--seq", str(args.seq),
+    "--lr", "3e-3",
+    "--ckpt-dir", "runs/example_ckpt",
+    "--ckpt-every", "100",
+    "--metrics-out", "runs/example_train_metrics.json",
+])
+
+first, last = history[0]["loss"], history[-1]["loss"]
+print(f"loss {first:.3f} -> {last:.3f}")
+assert last < first, "training did not reduce loss"
+print("training reduced loss ✓")

@@ -1,0 +1,16 @@
+"""REAP core: the paper's contribution — inspector-executor sparse algebra.
+
+Host inspector (CPU pass): formats, rir, inspector, etree.
+Device executors: spgemm, cholesky (+ Pallas kernels in repro.kernels).
+"""
+from .formats import BSR, COO, CSR, random_csr, random_spd_csr  # noqa: F401
+from .rir import (DEFAULT_CAPACITY, ElementBundles, ScheduleBundle,  # noqa: F401
+                  pack_csr, unpack_to_csr)
+from .inspector import (SpGemmBlockPlan, SpGemmGatherPlan,  # noqa: F401
+                        choose_spgemm_path, inspect_spgemm_block,
+                        inspect_spgemm_gather)
+from .etree import CholeskyPlan, etree, etree_levels, inspect_cholesky, symbolic  # noqa: F401
+from .spgemm import (block_result_to_dense, spgemm, spgemm_block_execute,  # noqa: F401
+                     spgemm_gather_execute, spgemm_ref_numpy)
+from .cholesky import (cholesky, cholesky_baseline_numpy, cholesky_execute,  # noqa: F401
+                       plan_to_dense_l)

@@ -1,0 +1,130 @@
+"""Sparse Cholesky (left-looking, simplicial LL^T) — REAP split.
+
+Host (core.etree.inspect_cholesky) has already produced a CholeskyPlan:
+L's symbolic pattern, etree level sets, and per-level update triples.  This
+module is the device-side numeric executor:
+
+  per level ℓ (all columns independent — the paper's parallel pipelines):
+    1. cmod:   vals[dst] -= vals[src1] * vals[src2]     (dot-product PEs)
+    2. cdiv:   vals[diag] = sqrt(vals[diag])            (Div/SqRoot PEs)
+               vals[offd] /= vals[diag of column]
+
+The level loop is the only host interaction; within a level everything is a
+single jitted step over padded (bucketed) index arrays — the RIR padding
+discipline keeps compiled shapes static, exactly like bundle capacity in the
+paper.  Matching the paper, the numeric phase is all fp32/fp64 FLOPs with no
+symbolic work on the device.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .etree import CholeskyPlan, inspect_cholesky
+from .formats import CSR
+
+
+def _bucket(n: int) -> int:
+    """Next power of two ≥ n (bounds recompilation to O(log max))."""
+    if n <= 1:
+        return 1
+    return 1 << (n - 1).bit_length()
+
+
+def _pad(arr: np.ndarray, size: int, fill: int) -> jnp.ndarray:
+    out = np.full(size, fill, dtype=np.int64)
+    out[:arr.shape[0]] = arr
+    return jnp.asarray(out)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _level_step(vals, src1, src2, dst, diag_idx, off_idx, off_diag):
+    """One etree level: cmod (gather–multiply–scatter-sub) then cdiv."""
+    contrib = vals[src1] * vals[src2]
+    vals = vals.at[dst].add(-contrib)            # dead slots hit scratch
+    d = jnp.sqrt(vals[diag_idx])
+    vals = vals.at[diag_idx].set(d)
+    vals = vals.at[off_idx].set(vals[off_idx] / vals[off_diag])
+    return vals
+
+
+def cholesky_execute(plan: CholeskyPlan, dtype=jnp.float64
+                     ) -> Tuple[np.ndarray, dict]:
+    """Run the numeric phase. Returns (L values in CSC order, stats)."""
+    scratch = plan.nnz                           # dead-op slot
+    vals = np.zeros(plan.nnz + 1, dtype=np.float64 if dtype == jnp.float64
+                    else np.float32)
+    vals[plan.a_scatter_pos] = plan.a_vals
+    vals = jnp.asarray(vals, dtype=dtype)
+
+    col_of_slot = np.repeat(np.arange(plan.n), np.diff(plan.col_ptr))
+    t0 = time.perf_counter()
+    for ell in range(plan.n_levels):
+        s1, s2, d = plan.upd_src1[ell], plan.upd_src2[ell], plan.upd_dst[ell]
+        cols = plan.cols_per_level[ell]
+        diag = plan.diag_pos[cols]
+        # off-diagonal slots of this level's columns + their diag slot
+        seg_starts = plan.col_ptr[cols] + 1       # skip the diagonal
+        seg_ends = plan.col_ptr[cols + 1]
+        counts = seg_ends - seg_starts
+        from .inspector import _ranges
+        off = _ranges(seg_starts, counts)
+        off_diag = plan.diag_pos[col_of_slot[off]]
+
+        bu = _bucket(max(1, s1.shape[0]))
+        bc = _bucket(max(1, diag.shape[0]))
+        bo = _bucket(max(1, off.shape[0]))
+        vals = _level_step(
+            vals,
+            _pad(s1, bu, scratch), _pad(s2, bu, scratch), _pad(d, bu, scratch),
+            _pad(diag, bc, scratch),
+            _pad(off, bo, scratch), _pad(off_diag, bo, scratch))
+    vals.block_until_ready()
+    exec_s = time.perf_counter() - t0
+    stats = dict(inspect_s=plan.inspect_seconds, execute_s=exec_s,
+                 n_levels=plan.n_levels, nnz_l=plan.nnz, flops=plan.flops())
+    return np.asarray(vals[:plan.nnz]), stats
+
+
+def cholesky(a: CSR, dtype=jnp.float64):
+    """Full REAP sparse Cholesky: A = L L^T. Returns (plan, L values, stats)."""
+    plan = inspect_cholesky(a)
+    vals, stats = cholesky_execute(plan, dtype)
+    return plan, vals, stats
+
+
+def plan_to_dense_l(plan: CholeskyPlan, vals: np.ndarray) -> np.ndarray:
+    out = np.zeros((plan.n, plan.n), dtype=vals.dtype)
+    col_of_slot = np.repeat(np.arange(plan.n), np.diff(plan.col_ptr))
+    out[plan.row_idx, col_of_slot] = vals
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CPU baseline (CHOLMOD simplicial-LL^T stand-in): same plan, numpy loops
+# ---------------------------------------------------------------------------
+
+def cholesky_baseline_numpy(plan: CholeskyPlan) -> Tuple[np.ndarray, float]:
+    """Column-at-a-time numpy left-looking factorization (numeric only)."""
+    vals = np.zeros(plan.nnz + 1, dtype=np.float64)
+    vals[plan.a_scatter_pos] = plan.a_vals
+    col_of_slot = np.repeat(np.arange(plan.n), np.diff(plan.col_ptr))
+    t0 = time.perf_counter()
+    for ell in range(plan.n_levels):
+        s1, s2, d = plan.upd_src1[ell], plan.upd_src2[ell], plan.upd_dst[ell]
+        np.subtract.at(vals, d, vals[s1] * vals[s2])
+        cols = plan.cols_per_level[ell]
+        diag = plan.diag_pos[cols]
+        vals[diag] = np.sqrt(vals[diag])
+        from .inspector import _ranges
+        starts = plan.col_ptr[cols] + 1
+        counts = plan.col_ptr[cols + 1] - starts
+        off = _ranges(starts, counts)
+        vals[off] /= vals[plan.diag_pos[col_of_slot[off]]]
+    return vals[:plan.nnz], time.perf_counter() - t0

@@ -1,0 +1,243 @@
+"""Host-side sparse matrix containers (numpy).
+
+These are the *standard formats* of the paper (CSR/CSC/COO) plus BSR, the
+block format the TPU-adapted executor consumes.  Everything here runs on the
+host as part of REAP's CPU pass; no jax is imported.
+
+The containers are deliberately small and dependency-free (no scipy in the
+container) — conversions are vectorized numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class COO:
+    """Coordinate format: parallel (row, col, val) arrays."""
+
+    n_rows: int
+    n_cols: int
+    row: np.ndarray
+    col: np.ndarray
+    val: np.ndarray
+
+    @property
+    def nnz(self) -> int:
+        return int(self.row.shape[0])
+
+    def to_csr(self) -> "CSR":
+        return CSR.from_coo(self)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.n_rows, self.n_cols), dtype=self.val.dtype)
+        np.add.at(out, (self.row, self.col), self.val)
+        return out
+
+
+@dataclasses.dataclass
+class CSR:
+    """Compressed sparse row. ``indptr`` has length n_rows+1."""
+
+    n_rows: int
+    n_cols: int
+    indptr: np.ndarray
+    indices: np.ndarray
+    data: np.ndarray
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def row_lengths(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    @property
+    def density(self) -> float:
+        denom = max(1, self.n_rows * self.n_cols)
+        return self.nnz / denom
+
+    def nnz_rows(self) -> np.ndarray:
+        """Row index of every stored element (COO expansion of indptr)."""
+        return np.repeat(np.arange(self.n_rows), self.row_lengths)
+
+    @staticmethod
+    def from_coo(coo: COO, sum_duplicates: bool = True) -> "CSR":
+        order = np.lexsort((coo.col, coo.row))
+        row, col, val = coo.row[order], coo.col[order], coo.val[order]
+        if sum_duplicates and row.size:
+            key_new = np.empty(row.size, dtype=bool)
+            key_new[0] = True
+            key_new[1:] = (row[1:] != row[:-1]) | (col[1:] != col[:-1])
+            group = np.cumsum(key_new) - 1
+            n_unique = int(group[-1]) + 1
+            uval = np.zeros(n_unique, dtype=val.dtype)
+            np.add.at(uval, group, val)
+            row, col, val = row[key_new], col[key_new], uval
+        indptr = np.zeros(coo.n_rows + 1, dtype=np.int64)
+        np.add.at(indptr, row + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        return CSR(coo.n_rows, coo.n_cols, indptr, col.astype(np.int64), val)
+
+    @staticmethod
+    def from_dense(a: np.ndarray) -> "CSR":
+        r, c = np.nonzero(a)
+        return CSR.from_coo(COO(a.shape[0], a.shape[1], r, c, a[r, c]))
+
+    def to_coo(self) -> COO:
+        return COO(self.n_rows, self.n_cols, self.nnz_rows(), self.indices.copy(), self.data.copy())
+
+    def to_dense(self) -> np.ndarray:
+        return self.to_coo().to_dense()
+
+    def transpose(self) -> "CSR":
+        """CSR of A^T (equivalently: the CSC view of A)."""
+        coo = self.to_coo()
+        return CSR.from_coo(COO(self.n_cols, self.n_rows, coo.col, coo.row, coo.val),
+                            sum_duplicates=False)
+
+    def row(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        s, e = self.indptr[i], self.indptr[i + 1]
+        return self.indices[s:e], self.data[s:e]
+
+    def lower_triangle(self, strict: bool = False) -> "CSR":
+        coo = self.to_coo()
+        keep = coo.row > coo.col if strict else coo.row >= coo.col
+        return CSR.from_coo(
+            COO(self.n_rows, self.n_cols, coo.row[keep], coo.col[keep], coo.val[keep]),
+            sum_duplicates=False)
+
+
+@dataclasses.dataclass
+class BSR:
+    """Block sparse row: dense ``block x block`` tiles at block coordinates.
+
+    This is the TPU-native RIR bundle layout — each stored block is an MXU
+    tile; ``indptr``/``indices`` address *block* rows/cols.
+    """
+
+    n_rows: int      # element rows (padded to a multiple of block)
+    n_cols: int
+    block: int
+    indptr: np.ndarray   # (n_block_rows + 1,)
+    indices: np.ndarray  # (n_blocks,) block-column of each block
+    blocks: np.ndarray   # (n_blocks, block, block)
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.n_rows // self.block
+
+    @property
+    def n_block_cols(self) -> int:
+        return self.n_cols // self.block
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def fill(self) -> float:
+        """Fraction of stored block entries that are structurally nonzero."""
+        if self.n_blocks == 0:
+            return 0.0
+        return float(np.count_nonzero(self.blocks)) / self.blocks.size
+
+    def block_rows(self) -> np.ndarray:
+        return np.repeat(np.arange(self.n_block_rows), np.diff(self.indptr))
+
+    @staticmethod
+    def from_csr(a: CSR, block: int) -> "BSR":
+        nr = -(-a.n_rows // block) * block
+        nc = -(-a.n_cols // block) * block
+        coo = a.to_coo()
+        brow, bcol = coo.row // block, coo.col // block
+        key = brow * (nc // block) + bcol
+        order = np.argsort(key, kind="stable")
+        key_s = key[order]
+        uniq, starts = np.unique(key_s, return_index=True)
+        n_blocks = uniq.shape[0]
+        blocks = np.zeros((n_blocks, block, block), dtype=a.data.dtype)
+        # scatter elements into their block
+        inv = np.searchsorted(uniq, key)
+        lr, lc = coo.row % block, coo.col % block
+        np.add.at(blocks, (inv, lr, lc), coo.val)
+        ubrow, ubcol = uniq // (nc // block), uniq % (nc // block)
+        indptr = np.zeros(nr // block + 1, dtype=np.int64)
+        np.add.at(indptr, ubrow + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        return BSR(nr, nc, block, indptr, ubcol.astype(np.int64), blocks)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.n_rows, self.n_cols), dtype=self.blocks.dtype)
+        br = self.block_rows()
+        for t in range(self.n_blocks):
+            r0, c0 = br[t] * self.block, self.indices[t] * self.block
+            out[r0:r0 + self.block, c0:c0 + self.block] += self.blocks[t]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Synthetic matrix generators (SuiteSparse stand-ins for the offline container)
+# ---------------------------------------------------------------------------
+
+def random_csr(n_rows: int, n_cols: int, density: float, rng: np.random.Generator,
+               pattern: str = "uniform", dtype=np.float32) -> CSR:
+    """Random sparse matrix with a controllable structure.
+
+    ``pattern``:
+      * ``uniform``  — iid positions (models e.g. cage12)
+      * ``powerlaw`` — skewed row lengths (models web/graph matrices)
+      * ``banded``   — diagonal band (models PDE meshes: offshore, filter3D)
+      * ``blocky``   — clustered dense-ish blocks (models FEM: cant, consph)
+    """
+    target = max(n_rows, int(density * n_rows * n_cols))
+    if pattern == "uniform":
+        row = rng.integers(0, n_rows, target)
+        col = rng.integers(0, n_cols, target)
+    elif pattern == "powerlaw":
+        w = 1.0 / np.arange(1, n_rows + 1) ** 0.8
+        row = rng.choice(n_rows, size=target, p=w / w.sum())
+        col = rng.integers(0, n_cols, target)
+    elif pattern == "banded":
+        bw = max(2, int(density * n_cols * 4))
+        row = rng.integers(0, n_rows, target)
+        off = rng.integers(-bw, bw + 1, target)
+        col = np.clip(row * n_cols // max(1, n_rows) + off, 0, n_cols - 1)
+    elif pattern == "blocky":
+        nb = max(1, n_rows // 64)
+        b = rng.integers(0, nb, target)
+        row = np.clip(b * 64 + rng.integers(0, 64, target), 0, n_rows - 1)
+        col = np.clip(b * 64 * n_cols // max(1, n_rows) + rng.integers(0, 64, target),
+                      0, n_cols - 1)
+    else:
+        raise ValueError(f"unknown pattern {pattern!r}")
+    val = rng.standard_normal(target).astype(dtype)
+    return CSR.from_coo(COO(n_rows, n_cols, row, col, val))
+
+
+def random_spd_csr(n: int, density: float, rng: np.random.Generator,
+                   pattern: str = "banded", dtype=np.float64) -> CSR:
+    """Sparse symmetric positive-definite matrix (for Cholesky).
+
+    Built as ``B + B^T + diag(shift)`` with a diagonal shift that guarantees
+    strict diagonal dominance → SPD.
+    """
+    b = random_csr(n, n, density / 2, rng, pattern, dtype)
+    coo = b.to_coo()
+    row = np.concatenate([coo.row, coo.col])
+    col = np.concatenate([coo.col, coo.row])
+    val = np.concatenate([coo.val, coo.val])
+    sym = CSR.from_coo(COO(n, n, row, col, val))
+    # diagonal dominance: diag = 1 + sum |off-diag| per row
+    rowsum = np.zeros(n, dtype=np.float64)
+    np.add.at(rowsum, sym.nnz_rows(), np.abs(sym.data))
+    drow = np.arange(n)
+    coo2 = sym.to_coo()
+    row = np.concatenate([coo2.row, drow])
+    col = np.concatenate([coo2.col, drow])
+    val = np.concatenate([coo2.val, rowsum + 1.0])
+    return CSR.from_coo(COO(n, n, row, col, val.astype(dtype)))

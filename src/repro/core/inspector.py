@@ -1,0 +1,215 @@
+"""The REAP inspector: the paper's CPU pass, generalized.
+
+The inspector consumes standard sparse formats and produces *plans*: RIR
+bundles + schedule bundles that make the executor's data access completely
+regular.  It performs every irregular task of the computation —
+
+  * index matching     (paper: CAM match units)      → precomputed gather ids
+  * sorting partials   (paper: shift-register sorter) → plan orders partials
+  * merge scheduling   (paper: merge queues)          → precomputed segment ids
+  * row splitting      (paper: bundle capacity)       → padded tiles
+  * symbolic analysis  (paper: Cholesky etree pass)   → see core.etree
+
+so the device-side executor is a straight stream of FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from .formats import BSR, CSR
+from .rir import ScheduleBundle
+
+
+def _ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Concatenate ``[arange(s, s+c) for s, c in zip(starts, counts)]`` fast."""
+    nz = counts > 0
+    starts, counts = np.asarray(starts)[nz], np.asarray(counts)[nz]
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    out = np.ones(total, dtype=np.int64)
+    out[0] = starts[0]
+    excl = np.cumsum(counts) - counts
+    out[excl[1:]] = starts[1:] - (starts[:-1] + counts[:-1]) + 1
+    return np.cumsum(out)
+
+
+# ---------------------------------------------------------------------------
+# SpGEMM — element (gather/VPU) plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpGemmGatherPlan:
+    """Element-level plan for C = A @ B (row-by-row Gustavson).
+
+    Every partial product t is ``A.data[a_idx[t]] * B.data[b_idx[t]]`` and
+    accumulates into output slot ``out_idx[t]``.  Partials are sorted by
+    output slot (the paper's sort unit, done once on the host) so the
+    device-side merge is a contiguous segment reduction.
+
+    The arrays are padded to a multiple of ``tile`` with a dummy slot
+    ``c_nnz`` so the executor shape is static (RIR padding discipline).
+    """
+
+    n_rows: int
+    n_cols: int
+    c_nnz: int
+    c_indptr: np.ndarray
+    c_indices: np.ndarray
+    a_idx: np.ndarray
+    b_idx: np.ndarray
+    out_idx: np.ndarray
+    n_pp: int            # live partial products (before padding)
+    inspect_seconds: float
+
+    @property
+    def schedule(self) -> ScheduleBundle:
+        return ScheduleBundle("spgemm_gather", {
+            "a_idx": self.a_idx, "b_idx": self.b_idx, "out_idx": self.out_idx})
+
+    def flops(self) -> int:
+        return 2 * self.n_pp
+
+
+def inspect_spgemm_gather(a: CSR, b: CSR, tile: int = 1024) -> SpGemmGatherPlan:
+    """Host inspection for the VPU path (Algorithm 1, lines 2-16 symbolic)."""
+    t0 = time.perf_counter()
+    if a.n_cols != b.n_rows:
+        raise ValueError(f"shape mismatch {a.n_cols} vs {b.n_rows}")
+    b_row_len = b.row_lengths
+    k = a.indices                     # match feature: col of A == row of B
+    counts = b_row_len[k]             # B-row length per A nnz
+    a_idx = np.repeat(np.arange(a.nnz, dtype=np.int64), counts)
+    b_idx = _ranges(b.indptr[k], counts)
+    out_row = np.repeat(a.nnz_rows(), counts)
+    out_col = b.indices[b_idx]
+    n_pp = int(a_idx.shape[0])
+
+    # symbolic output pattern: unique (row, col), CSR-ordered
+    key = out_row * np.int64(b.n_cols) + out_col
+    uniq, inv = np.unique(key, return_inverse=True)
+    c_nnz = int(uniq.shape[0])
+    c_rows = (uniq // b.n_cols).astype(np.int64)
+    c_indices = (uniq % b.n_cols).astype(np.int64)
+    c_indptr = np.zeros(a.n_rows + 1, dtype=np.int64)
+    np.add.at(c_indptr, c_rows + 1, 1)
+    np.cumsum(c_indptr, out=c_indptr)
+
+    # host-side sort of partials by output slot (paper's sort unit)
+    order = np.argsort(inv, kind="stable")
+    a_idx, b_idx, out_idx = a_idx[order], b_idx[order], inv[order].astype(np.int64)
+
+    # pad to tile with dummy slot c_nnz (value contribution lands off-output)
+    pad = (-n_pp) % tile
+    if pad or n_pp == 0:
+        pad = pad if n_pp else tile
+        a_idx = np.concatenate([a_idx, np.zeros(pad, np.int64)])
+        b_idx = np.concatenate([b_idx, np.zeros(pad, np.int64)])
+        out_idx = np.concatenate([out_idx, np.full(pad, c_nnz, np.int64)])
+    return SpGemmGatherPlan(a.n_rows, b.n_cols, c_nnz, c_indptr, c_indices,
+                            a_idx, b_idx, out_idx, n_pp,
+                            time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# SpGEMM — block (BSR/MXU) plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpGemmBlockPlan:
+    """Block-level plan for C = A @ B on the MXU path.
+
+    The schedule is a flat list of block-pair jobs sorted by output block:
+      pair t: C_blocks[out_id[t]] += A_blocks[a_id[t]] @ B_blocks[b_id[t]]
+    ``is_first[t]`` marks the first pair of each output group, so a streaming
+    kernel can zero its VMEM accumulator there and write the block out on the
+    last pair (``is_last``).  This ordering is the paper's pipeline schedule:
+    one output tile in flight per grid lane, operands streamed.
+    """
+
+    block: int
+    a_bsr: BSR
+    b_bsr: BSR
+    n_out_blocks: int
+    out_brow: np.ndarray
+    out_bcol: np.ndarray
+    a_id: np.ndarray
+    b_id: np.ndarray
+    out_id: np.ndarray
+    is_first: np.ndarray
+    is_last: np.ndarray
+    n_pairs: int
+    inspect_seconds: float
+
+    @property
+    def schedule(self) -> ScheduleBundle:
+        return ScheduleBundle("spgemm_block", {
+            "a_id": self.a_id.astype(np.int32),
+            "b_id": self.b_id.astype(np.int32),
+            "out_id": self.out_id.astype(np.int32),
+            "is_first": self.is_first.astype(np.int32),
+            "is_last": self.is_last.astype(np.int32)})
+
+    def flops(self) -> int:
+        return 2 * self.n_pairs * self.block ** 3
+
+    def useful_flops(self) -> int:
+        """FLOPs a perfectly element-sparse executor would do (fill metric)."""
+        a_nnz = np.count_nonzero(self.a_bsr.blocks)
+        return int(2 * a_nnz * self.block)  # rough: each a-elt meets `block` b-cols
+
+
+def inspect_spgemm_block(a: CSR, b: CSR, block: int = 128) -> SpGemmBlockPlan:
+    """Host inspection for the MXU path: block Gustavson schedule."""
+    t0 = time.perf_counter()
+    a_bsr = BSR.from_csr(a, block)
+    b_bsr = BSR.from_csr(b, block)
+    # block-level Gustavson expansion over (a-block, matching b-block-row)
+    ab_rows = a_bsr.block_rows()                    # block-row of each A block
+    k = a_bsr.indices                                # block-col == B block-row
+    b_row_len = np.diff(b_bsr.indptr)
+    counts = b_row_len[k]
+    a_id = np.repeat(np.arange(a_bsr.n_blocks, dtype=np.int64), counts)
+    b_id = _ranges(b_bsr.indptr[k], counts)
+    out_brow = np.repeat(ab_rows, counts)
+    out_bcol = b_bsr.indices[b_id]
+
+    key = out_brow * np.int64(b_bsr.n_block_cols) + out_bcol
+    uniq, inv = np.unique(key, return_inverse=True)
+    n_out = int(uniq.shape[0])
+    order = np.argsort(inv, kind="stable")
+    a_id, b_id, out_id = a_id[order], b_id[order], inv[order].astype(np.int64)
+    n_pairs = int(a_id.shape[0])
+    if n_pairs:
+        is_first = np.empty(n_pairs, dtype=bool)
+        is_first[0] = True
+        is_first[1:] = out_id[1:] != out_id[:-1]
+        is_last = np.empty(n_pairs, dtype=bool)
+        is_last[-1] = True
+        is_last[:-1] = out_id[1:] != out_id[:-1]
+    else:
+        is_first = np.zeros(0, dtype=bool)
+        is_last = np.zeros(0, dtype=bool)
+    return SpGemmBlockPlan(block, a_bsr, b_bsr, n_out,
+                           (uniq // b_bsr.n_block_cols).astype(np.int64),
+                           (uniq % b_bsr.n_block_cols).astype(np.int64),
+                           a_id, b_id, out_id, is_first, is_last, n_pairs,
+                           time.perf_counter() - t0)
+
+
+def choose_spgemm_path(a: CSR, b: CSR, block: int = 128,
+                       fill_threshold: float = 0.02) -> str:
+    """Inspector heuristic: pick MXU blocking only when tiles are dense
+    enough to beat the gather path (paper: 'CPU has information about the
+    FPGA design and uses it to layout the data').
+
+    The MXU does 2*block^3 flops per pair regardless of fill; the gather path
+    does 2 flops per true partial product at ~1/100 the peak rate.  Blocking
+    wins when block fill > ~ (VPU rate / MXU rate) ≈ 1-2%.
+    """
+    a_bsr = BSR.from_csr(a, block)
+    return "block" if a_bsr.fill >= fill_threshold else "gather"

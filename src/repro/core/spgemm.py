@@ -1,0 +1,157 @@
+"""SpGEMM: row-by-row (Gustavson) formulation, REAP-split into
+host inspection (core.inspector) + device execution (this module).
+
+Two executors mirror the DESIGN.md adaptation:
+
+* ``gather`` (VPU path)  — element bundles; device does gather → multiply →
+  segment-sum.  Matches the paper's element pipelines most literally.
+* ``block`` (MXU path)   — BSR bundles; device streams 128×128 tile dots
+  driven by the inspector's schedule (Pallas kernel in kernels/bsr_spgemm.py,
+  jnp fallback here).
+
+The numpy reference ``spgemm_ref_numpy`` doubles as the CPU-library baseline
+(MKL stand-in) for the paper's figures.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .formats import BSR, CSR
+from .inspector import (SpGemmBlockPlan, SpGemmGatherPlan, choose_spgemm_path,
+                        inspect_spgemm_block, inspect_spgemm_gather)
+
+
+# ---------------------------------------------------------------------------
+# Reference / CPU baseline
+# ---------------------------------------------------------------------------
+
+def spgemm_ref_numpy(a: CSR, b: CSR) -> CSR:
+    """Vectorized numpy Gustavson SpGEMM — the CPU library stand-in."""
+    from .inspector import _ranges
+    b_row_len = b.row_lengths
+    k = a.indices
+    counts = b_row_len[k]
+    a_idx = np.repeat(np.arange(a.nnz, dtype=np.int64), counts)
+    b_idx = _ranges(b.indptr[k], counts)
+    out_row = np.repeat(a.nnz_rows(), counts)
+    out_col = b.indices[b_idx]
+    vals = a.data[a_idx] * b.data[b_idx]
+    key = out_row * np.int64(b.n_cols) + out_col
+    uniq, inv = np.unique(key, return_inverse=True)
+    acc = np.zeros(uniq.shape[0], dtype=a.data.dtype)
+    np.add.at(acc, inv, vals)
+    indptr = np.zeros(a.n_rows + 1, dtype=np.int64)
+    rows = (uniq // b.n_cols).astype(np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return CSR(a.n_rows, b.n_cols, indptr, (uniq % b.n_cols).astype(np.int64), acc)
+
+
+# ---------------------------------------------------------------------------
+# Gather (VPU) executor
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("c_nnz",))
+def _gather_execute(a_data, b_data, a_idx, b_idx, out_idx, c_nnz: int):
+    # trailing zero slot keeps padded (dead) gathers in bounds
+    a_data = jnp.concatenate([a_data, jnp.zeros(1, a_data.dtype)])
+    b_data = jnp.concatenate([b_data, jnp.zeros(1, b_data.dtype)])
+    pp = a_data[a_idx] * b_data[b_idx]          # multiply units
+    c = jax.ops.segment_sum(pp, out_idx, num_segments=c_nnz + 1,
+                            indices_are_sorted=True)  # merge units
+    return c[:c_nnz]
+
+
+def spgemm_gather_execute(plan: SpGemmGatherPlan, a_data: np.ndarray,
+                          b_data: np.ndarray) -> np.ndarray:
+    return np.asarray(_gather_execute(
+        jnp.asarray(a_data), jnp.asarray(b_data),
+        jnp.asarray(plan.a_idx), jnp.asarray(plan.b_idx),
+        jnp.asarray(plan.out_idx), c_nnz=plan.c_nnz))
+
+
+# ---------------------------------------------------------------------------
+# Block (MXU) executor — jnp fallback; Pallas kernel lives in kernels/
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_out",))
+def _block_execute_jnp(a_blocks, b_blocks, a_id, b_id, out_id, n_out: int):
+    prods = jnp.einsum("tij,tjk->tik", a_blocks[a_id], b_blocks[b_id],
+                       preferred_element_type=jnp.float32)
+    return jax.ops.segment_sum(prods, out_id, num_segments=n_out,
+                               indices_are_sorted=True)
+
+
+def spgemm_block_execute(plan: SpGemmBlockPlan, use_pallas: bool = True
+                         ) -> np.ndarray:
+    """Returns the dense (n_out_blocks, block, block) output tiles."""
+    if plan.n_pairs == 0:
+        return np.zeros((plan.n_out_blocks, plan.block, plan.block), np.float32)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return np.asarray(kops.bsr_spgemm(
+            jnp.asarray(plan.a_bsr.blocks, jnp.float32),
+            jnp.asarray(plan.b_bsr.blocks, jnp.float32),
+            jnp.asarray(plan.a_id, jnp.int32),
+            jnp.asarray(plan.b_id, jnp.int32),
+            jnp.asarray(plan.out_id, jnp.int32),
+            jnp.asarray(plan.is_first, jnp.int32),
+            jnp.asarray(plan.is_last, jnp.int32),
+            n_out_blocks=plan.n_out_blocks))
+    return np.asarray(_block_execute_jnp(
+        jnp.asarray(plan.a_bsr.blocks, jnp.float32),
+        jnp.asarray(plan.b_bsr.blocks, jnp.float32),
+        jnp.asarray(plan.a_id), jnp.asarray(plan.b_id),
+        jnp.asarray(plan.out_id), n_out=plan.n_out_blocks))
+
+
+def block_result_to_dense(plan: SpGemmBlockPlan, c_blocks: np.ndarray
+                          ) -> np.ndarray:
+    bs = plan.block
+    out = np.zeros((plan.a_bsr.n_rows, plan.b_bsr.n_cols), np.float32)
+    for t in range(plan.n_out_blocks):
+        r0, c0 = plan.out_brow[t] * bs, plan.out_bcol[t] * bs
+        out[r0:r0 + bs, c0:c0 + bs] = c_blocks[t]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def spgemm(a: CSR, b: CSR, method: str = "auto", block: int = 128,
+           use_pallas: bool = True) -> Tuple[CSR, dict]:
+    """C = A @ B with the REAP split. Returns (C, stats).
+
+    stats records the inspector/executor time split (paper Fig 7).
+    """
+    if method == "auto":
+        method = choose_spgemm_path(a, b, block)
+    if method == "gather":
+        plan = inspect_spgemm_gather(a, b)
+        t0 = time.perf_counter()
+        c_data = spgemm_gather_execute(plan, a.data, b.data)
+        exec_s = time.perf_counter() - t0
+        c = CSR(a.n_rows, b.n_cols, plan.c_indptr, plan.c_indices, c_data)
+        stats = dict(method="gather", inspect_s=plan.inspect_seconds,
+                     execute_s=exec_s, flops=plan.flops(), n_pp=plan.n_pp)
+        return c, stats
+    if method == "block":
+        plan = inspect_spgemm_block(a, b, block)
+        t0 = time.perf_counter()
+        c_blocks = spgemm_block_execute(plan, use_pallas=use_pallas)
+        exec_s = time.perf_counter() - t0
+        dense = block_result_to_dense(plan, c_blocks)
+        c = CSR.from_dense(dense[:a.n_rows, :b.n_cols])
+        stats = dict(method="block", inspect_s=plan.inspect_seconds,
+                     execute_s=exec_s, flops=plan.flops(),
+                     n_pairs=plan.n_pairs, fill=plan.a_bsr.fill)
+        return c, stats
+    raise ValueError(f"unknown method {method!r}")

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: schedule-driven block SpGEMM (REAP's SpGEMM executor).
+
+The inspector's schedule bundle (a_id, b_id, out_id, is_first, is_last) is
+passed as **scalar prefetch** operands; the BlockSpec index maps consult it
+to route operand tiles — the TPU analogue of REAP's input controller reading
+RIR metadata and routing bundles to pipelines (DESIGN.md §2).
+
+The schedule is sorted by output block, so each output tile stays resident
+in VMEM across its group of (A-block @ B-block) MXU dots and is flushed to
+HBM exactly once — the paper's "partial results maintained in bundles,
+merged before write-back" property.
+
+Grid: one step per scheduled block pair.  Block shapes: (1, bs, bs) tiles of
+the (n_blocks, bs, bs) bundle arrays; bs should be an MXU-aligned 128 on
+real hardware (tests also sweep smaller bs in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_id, b_id, out_id, is_first, is_last, a_ref, b_ref, o_ref):
+    del a_id, b_id, out_id, is_last
+    t = pl.program_id(0)
+
+    @pl.when(is_first[t] == 1)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0] += jnp.dot(a_ref[0], b_ref[0],
+                        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_out_blocks", "interpret"))
+def bsr_spgemm(a_blocks, b_blocks, a_id, b_id, out_id, is_first, is_last,
+               *, n_out_blocks: int, interpret: bool = True):
+    """C_blocks[out_id[t]] += A_blocks[a_id[t]] @ B_blocks[b_id[t]].
+
+    a_blocks: (na, bs, bs) f32; b_blocks: (nb, bs, bs) f32.
+    Schedule arrays: (n_pairs,) int32, sorted by out_id, with group-boundary
+    flags. Returns (n_out_blocks, bs, bs) f32.
+    """
+    n_pairs = a_id.shape[0]
+    bs = a_blocks.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(n_pairs,),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs),
+                         lambda t, aid, bid, oid, fi, la: (aid[t], 0, 0)),
+            pl.BlockSpec((1, bs, bs),
+                         lambda t, aid, bid, oid, fi, la: (bid[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bs),
+                               lambda t, aid, bid, oid, fi, la: (oid[t], 0, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out_blocks, bs, bs), jnp.float32),
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=2 * int(n_pairs) * bs ** 3,
+            bytes_accessed=(2 * int(n_pairs) + int(n_out_blocks)) * bs * bs * 4,
+            transcendentals=0),
+    )(a_id, b_id, out_id, is_first, is_last, a_blocks, b_blocks)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: BSR sparse-weight × dense-activation matmul.
+
+The paper's technique applied to *weight* sparsity in the LM stack
+(DESIGN.md §4): a host inspector prunes/blocks the weight matrix into BSR
+tiles and emits a job schedule (one job per nonzero weight block, sorted
+by output column-block); the kernel streams activation tiles through the
+MXU against only the stored weight blocks, consuming the schedule via
+scalar prefetch.  FLOPs scale with the *stored* blocks — weight sparsity
+becomes wall-clock savings instead of masked waste.
+
+Used by ``sparse_swiglu`` (structured-sparse FFN option for the dense
+architectures).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def inspect_bsr_weight(w_dense: np.ndarray, block: int,
+                       keep_fraction: float):
+    """Host inspector: magnitude-prune W into BSR blocks + job schedule.
+
+    Returns (blocks (nb, block, block), schedule dict) where the schedule
+    has, per job: the weight-block id, its k (input) block and j (output)
+    block, sorted by j with first/last group flags — the same RIR bundle
+    discipline as the SpGEMM executor.
+    """
+    d_in, d_out = w_dense.shape
+    assert d_in % block == 0 and d_out % block == 0
+    nk, nj = d_in // block, d_out // block
+    tiles = w_dense.reshape(nk, block, nj, block).transpose(0, 2, 1, 3)
+    energy = np.abs(tiles).sum(axis=(2, 3)).reshape(-1)      # (nk*nj,)
+    n_keep = max(nj, int(round(keep_fraction * nk * nj)))
+    keep_ids = np.argsort(-energy)[:n_keep]
+    kk, jj = keep_ids // nj, keep_ids % nj
+    live = np.ones(kk.shape[0], bool)
+    # every output block column needs ≥1 job (its tile must be zeroed even
+    # if fully pruned) — appended coverage jobs multiply by a ZERO block
+    missing = np.setdiff1d(np.arange(nj), np.unique(jj))
+    if missing.size:
+        kk = np.concatenate([kk, np.zeros(missing.size, kk.dtype)])
+        jj = np.concatenate([jj, missing])
+        live = np.concatenate([live, np.zeros(missing.size, bool)])
+    order = np.argsort(jj * nk + kk, kind="stable")
+    kk, jj, live = kk[order], jj[order], live[order]
+    blocks = tiles[kk, jj].copy()
+    blocks[~live] = 0.0
+    n_jobs = kk.shape[0]
+    is_first = np.ones(n_jobs, bool)
+    is_first[1:] = jj[1:] != jj[:-1]
+    is_last = np.ones(n_jobs, bool)
+    is_last[:-1] = jj[1:] != jj[:-1]
+    sched = dict(w_id=np.arange(n_jobs, dtype=np.int32),
+                 k_blk=kk.astype(np.int32), j_blk=jj.astype(np.int32),
+                 is_first=is_first.astype(np.int32),
+                 is_last=is_last.astype(np.int32))
+    mask = np.zeros((nk, nj), bool)
+    mask[kk[live], jj[live]] = True
+    return blocks.astype(w_dense.dtype), sched, mask
+
+
+def _kernel(w_id, k_blk, j_blk, is_first, is_last, x_ref, w_ref, o_ref):
+    del w_id, k_blk, j_blk, is_last
+    t = pl.program_id(1)
+
+    @pl.when(is_first[t] == 1)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                          preferred_element_type=jnp.float32
+                          ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_j_blocks", "bt", "interpret"))
+def bsr_spmm(x, w_blocks, w_id, k_blk, j_blk, is_first, is_last, *,
+             n_j_blocks: int, bt: int = 128, interpret: bool = True):
+    """out = x @ W_bsr.  x: (T, d_in); w_blocks: (n_jobs, bs, bs).
+
+    Schedule arrays (n_jobs,) are sorted by output block column with
+    group-boundary flags.  Returns (T, n_j_blocks*bs).
+    """
+    t_total, d_in = x.shape
+    bs = w_blocks.shape[-1]
+    n_jobs = w_id.shape[0]
+    bt = min(bt, t_total)
+    assert t_total % bt == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(t_total // bt, n_jobs),
+        in_specs=[
+            pl.BlockSpec((bt, bs),
+                         lambda ti, t, wid, kb, jb, fi, la: (ti, kb[t])),
+            pl.BlockSpec((1, bs, bs),
+                         lambda ti, t, wid, kb, jb, fi, la: (wid[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bs),
+                               lambda ti, t, wid, kb, jb, fi, la:
+                               (ti, jb[t])),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t_total, n_j_blocks * bs), x.dtype),
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=2 * (t_total // bt) * n_jobs * bt * bs * bs,
+            bytes_accessed=(t_total * d_in + n_jobs * bs * bs) * 2,
+            transcendentals=0),
+    )(w_id, k_blk, j_blk, is_first, is_last, x, w_blocks)

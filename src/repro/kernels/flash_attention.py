@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: blockwise (flash) attention with an RIR-style
+host-computed block schedule.
+
+REAP connection (DESIGN.md §4): causal and sliding-window masks make the
+attention score matrix *block-sparse with a statically known pattern*.  The
+host inspector (``attention_block_schedule``) enumerates, per query block,
+the visible KV block range — a metadata-only RIR bundle.  The kernel
+consumes it via scalar prefetch, so invisible KV blocks are never read from
+HBM (paper: "only stream those rows of B that match").
+
+Supports: causal, sliding window (gemma local layers), logit softcap
+(gemma-2), GQA via zero-copy KV head index mapping.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def attention_block_schedule(seq: int, bq: int, bk: int, *, causal: bool,
+                             window: int = 0):
+    """Host inspector: per q-block, the [lo, hi) range of visible kv blocks.
+
+    Returns (kv_lo, n_kv, nk_max) — int32 arrays of shape (seq//bq,).
+    """
+    nq = seq // bq
+    kv_lo = np.zeros(nq, dtype=np.int32)
+    n_kv = np.zeros(nq, dtype=np.int32)
+    for qi in range(nq):
+        q_first, q_last = qi * bq, qi * bq + bq - 1
+        hi = (q_last // bk + 1) if causal else (seq // bk)
+        lo = 0
+        if window > 0:
+            lo = max(0, (q_first - window + 1) // bk)
+        kv_lo[qi], n_kv[qi] = lo, hi - lo
+    return kv_lo, n_kv, int(n_kv.max())
+
+
+def _kernel(kv_lo, n_kv, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+            scale, causal, window, softcap, bq, bk):
+    qi, j = pl.program_id(2), pl.program_id(3)
+    nk_max = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    @pl.when(j < n_kv[qi])
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = (kv_lo[qi] + j) * bk + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[:, :1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * alpha + p.sum(-1, keepdims=True)
+        acc[...] = acc[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_s[...] = jnp.broadcast_to(m_new, m_s.shape)
+
+    @pl.when(j == nk_max - 1)
+    def _finish():
+        l = l_s[:, :1]
+        o_ref[0, 0] = jnp.where(l > 0, acc[...] / l, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "scale",
+                              "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float | None = None,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D) with H % Hkv == 0 (GQA).
+
+    The GQA mapping is zero-copy: the KV BlockSpec index map folds the
+    q-head → kv-head division, so kv tiles are DMA'd once per group.
+    """
+    b, h, s, d = q.shape
+    _, hkv, _, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0
+    scale = (d ** -0.5) if scale is None else scale
+
+    kv_lo, n_kv, nk_max = attention_block_schedule(
+        s, bq, bk, causal=causal, window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, s // bq, nk_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda bi, hi, qi, j, lo, nk: (bi, hi, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d),
+                lambda bi, hi, qi, j, lo, nk:
+                (bi, hi // group, jnp.minimum(lo[qi] + j, lo[qi] + nk[qi] - 1),
+                 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d),
+                lambda bi, hi, qi, j, lo, nk:
+                (bi, hi // group, jnp.minimum(lo[qi] + j, lo[qi] + nk[qi] - 1),
+                 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, j, lo, nk: (bi, hi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, softcap=softcap, bq=bq, bk=bk)
+    visible = int(n_kv.sum())
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=4 * b * h * visible * bq * bk * d,
+            bytes_accessed=q.size * q.dtype.itemsize * 4,
+            transcendentals=b * h * visible * bq * bk),
+    )(jnp.asarray(kv_lo), jnp.asarray(n_kv), q, k, v)

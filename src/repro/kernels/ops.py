@@ -1,0 +1,62 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; on this CPU container they run in
+``interpret=True`` (the kernel body executed in Python) so every code path
+is validated against the ref.py oracles.  ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref  # noqa: F401  (re-exported for tests/benchmarks)
+from .bsr_spgemm import bsr_spgemm as _bsr_spgemm
+from .flash_attention import attention_block_schedule  # noqa: F401
+from .flash_attention import flash_attention as _flash_attention
+from .moe_gemm import moe_gemm as _moe_gemm
+from .rwkv6_scan import rwkv6 as _rwkv6
+
+
+def _interpret(flag):
+    if flag is None:
+        return jax.default_backend() != "tpu"
+    return bool(flag)
+
+
+def bsr_spgemm(a_blocks, b_blocks, a_id, b_id, out_id, is_first, is_last, *,
+               n_out_blocks: int, interpret=None):
+    return _bsr_spgemm(a_blocks, b_blocks, a_id, b_id, out_id, is_first,
+                       is_last, n_out_blocks=n_out_blocks,
+                       interpret=_interpret(interpret))
+
+
+def moe_gemm(x_bundles, w, bundle_expert, *, bk: int = 512, bf: int = 512,
+             interpret=None):
+    return _moe_gemm(x_bundles, w, bundle_expert, bk=bk, bf=bf,
+                     interpret=_interpret(interpret))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale=None, bq: int = 128,
+                    bk: int = 128, interpret=None):
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap, scale=scale, bq=bq, bk=bk,
+                            interpret=_interpret(interpret))
+
+
+def rwkv6(r, k, v, w, u, *, chunk: int = 32, interpret=None):
+    return _rwkv6(r, k, v, w, u, chunk=chunk,
+                  interpret=_interpret(interpret))
+
+
+def bsr_spmm(x, w_blocks, sched, *, n_j_blocks: int, bt: int = 128,
+             interpret=None):
+    """Structured-sparse weight matmul (schedule from inspect_bsr_weight)."""
+    import jax.numpy as jnp
+
+    from .bsr_spmm import bsr_spmm as _bsr_spmm
+    return _bsr_spmm(x, w_blocks, jnp.asarray(sched["w_id"]),
+                     jnp.asarray(sched["k_blk"]), jnp.asarray(sched["j_blk"]),
+                     jnp.asarray(sched["is_first"]),
+                     jnp.asarray(sched["is_last"]),
+                     n_j_blocks=n_j_blocks, bt=bt,
+                     interpret=_interpret(interpret))

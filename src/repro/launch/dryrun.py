@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch × shape × mesh) cell lowers,
+SPMD-partitions and compiles, and extract the roofline inputs.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.  This is
+the ONLY module that sets it (smoke tests and benches see 1 device).
+
+Scan-correction protocol: XLA's cost analysis counts a `while` (scan) body
+ONCE, not ×trip-count.  Every cell is therefore lowered three times — full
+config, 1 period of layers, 2 periods — and the roofline terms use the
+affine correction  total = full + body × (n_periods − 1)  where
+body = terms(2P) − terms(1P).  This is exact for flops/bytes/collectives
+(cost is affine in trip count) and costs two extra cheap compiles.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multi-pod] [--out runs/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, get_shape
+from repro.launch import roofline as R
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (abstract_train_state, input_specs,
+                                make_decode_step, make_prefill_step,
+                                make_train_step, train_shardings,
+                                decode_shardings)
+from repro.models.model import abstract_params
+from repro.optim import adamw
+from repro.parallel import sharding as S
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def cell_is_skipped(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return ("long_500k needs sub-quadratic attention; "
+                f"{arch} is pure full-attention (DESIGN.md §5 skip list)")
+    return None
+
+
+def _opt_cfg(cfg):
+    return adamw.AdamWConfig(
+        state_dtype=cfg.pdtype if cfg.param_dtype == "bfloat16"
+        else jax.numpy.float32)
+
+
+def _lower_compile(cfg, shape, mesh):
+    """Lower + compile one (config, shape) on mesh. Returns compiled."""
+    specs = input_specs(cfg, shape)
+    opt_cfg = _opt_cfg(cfg)
+    with mesh:
+        if shape.kind == "train":
+            params, opt_state = abstract_train_state(cfg, opt_cfg)
+            pshard, oshard, batch_sh = train_shardings(cfg, mesh, opt_cfg)
+            jitted = jax.jit(make_train_step(cfg, opt_cfg, mesh),
+                             in_shardings=(pshard, oshard, batch_sh(specs)),
+                             out_shardings=(pshard, oshard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params, opt_state, specs)
+        elif shape.kind == "prefill":
+            params = abstract_params(cfg)
+            pshard = S.params_shardings(cfg, mesh)
+            arg = specs.get("tokens", specs.get("frames"))
+            in_sh = NamedSharding(
+                mesh, S.batch_spec(mesh, shape.global_batch, arg.ndim - 1))
+            jitted = jax.jit(
+                make_prefill_step(cfg, shape.global_batch, shape.seq_len,
+                                  mesh),
+                in_shardings=(pshard, in_sh))
+            lowered = jitted.lower(params, arg)
+        else:  # decode
+            params = abstract_params(cfg)
+            pshard, cshard, tok_sh, pos_sh = decode_shardings(
+                cfg, mesh, specs["cache"], shape.global_batch)
+            jitted = jax.jit(make_decode_step(cfg, mesh),
+                             in_shardings=(pshard, cshard, tok_sh, pos_sh),
+                             out_shardings=(None, cshard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params, specs["cache"], specs["token"],
+                                   specs["pos"])
+        return lowered, lowered.compile()
+
+
+def _terms(compiled):
+    cost = compiled.cost_analysis()
+    coll = R.parse_collectives(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll.total_bytes,
+            "coll_per_op": coll.per_op,
+            "coll_count": coll.count}
+
+
+def _reduced_layers(cfg, k: int):
+    """cfg with k pattern-periods of layers, UNROLLED (scan_layers=False).
+
+    The unrolled straight-line HLO gives true per-period cost with the same
+    remat structure; the full scanned config cannot be used for cost because
+    XLA counts a while body once regardless of trip count.
+    """
+    reps = {"n_layers": cfg.period * k, "scan_layers": False}
+    if cfg.enc_dec:
+        reps["n_enc_layers"] = k
+        reps["n_layers"] = k
+    return dataclasses.replace(cfg, **reps)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               save_hlo: str | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec = dict(arch=arch, shape=shape_name,
+               mesh="2x16x16" if multi_pod else "16x16", n_chips=n_chips)
+
+    t0 = time.time()
+    lowered, compiled = _lower_compile(cfg, shape, mesh)
+    rec["compile_s"] = round(time.time() - t0, 1)
+    full = _terms(compiled)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "total_nonaliased_gib": round(
+            (mem.argument_size_in_bytes + mem.output_size_in_bytes
+             + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3),
+    }
+
+    # Scan-trip-count correction: the scanned while body is counted once by
+    # cost_analysis regardless of trip count, so cost terms come from two
+    # UNROLLED reduced-depth lowerings (2 and 3 periods):
+    #     body  = U3 − U2            (true per-period cost)
+    #     total = U2 + body × (n_rep − 2) + body × tail/period
+    # Multi-pod cells skip this (the roofline table is single-pod only; the
+    # multi-pod pass proves the "pod" axis shards and compiles).
+    n_rep = cfg.n_periods if not cfg.enc_dec else cfg.n_layers
+    if cfg.scan_layers and n_rep > 3 and not multi_pod:
+        _, c2 = _lower_compile(_reduced_layers(cfg, 2), shape, mesh)
+        _, c3 = _lower_compile(_reduced_layers(cfg, 3), shape, mesh)
+        t2, t3 = _terms(c2), _terms(c3)
+        body = {k: max(0.0, t3[k] - t2[k])
+                for k in ("flops", "bytes", "coll")}
+        tail_frac = len(cfg.tail_layers) / cfg.period
+        corrected = {k: t2[k] + body[k] * (n_rep - 2 + tail_frac)
+                     for k in ("flops", "bytes", "coll")}
+        rec["scan_correction"] = {"applied": True, "n_rep": n_rep,
+                                  "body_flops": body["flops"],
+                                  "body_bytes": body["bytes"],
+                                  "body_coll": body["coll"],
+                                  "uncorrected_flops": full["flops"]}
+    else:
+        corrected = {k: full[k] for k in ("flops", "bytes", "coll")}
+        rec["scan_correction"] = {"applied": False}
+
+    cost = {"flops": corrected["flops"], "bytes accessed": corrected["bytes"]}
+    coll = R.CollectiveStats(full["coll_per_op"], corrected["coll"],
+                             full["coll_count"], [])
+    rec["roofline"] = R.roofline_terms(cost, coll, n_chips)
+    mf, total_params = R.model_flops(cfg, shape)
+    rec["model_flops_global"] = mf
+    rec["total_params"] = total_params
+    hlo_global = corrected["flops"] * n_chips
+    rec["model_vs_hlo_flops"] = round(mf / hlo_global, 4) if hlo_global else 0
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(compiled.as_text())
+        rec["hlo_path"] = save_hlo
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            try:
+                if json.load(open(path)).get("status") in ("ok", "skipped"):
+                    print(f"[CACHED] {tag}", flush=True)
+                    continue
+            except Exception:
+                pass
+        skip = cell_is_skipped(arch, shape)
+        if skip:
+            rec = dict(arch=arch, shape=shape,
+                       mesh="2x16x16" if mp else "16x16",
+                       status="skipped", reason=skip)
+            print(f"[SKIP] {tag}: {skip}", flush=True)
+        else:
+            try:
+                hlo_path = (os.path.join(args.out, tag + ".hlo.txt")
+                            if args.save_hlo else None)
+                rec = lower_cell(arch, shape, multi_pod=mp,
+                                 save_hlo=hlo_path)
+                rec["status"] = "ok"
+                r = rec["roofline"]
+                print(f"[OK]   {tag}: compile={rec['compile_s']}s "
+                      f"mem={rec['memory']['total_nonaliased_gib']}GiB "
+                      f"compute={r['t_compute_s']:.3e}s "
+                      f"memory={r['t_memory_s']:.3e}s "
+                      f"coll={r['t_collective_s']:.3e}s "
+                      f"dom={r['dominant']} "
+                      f"useful={rec['model_vs_hlo_flops']}", flush=True)
+            except Exception as e:  # noqa: BLE001 — record the failure
+                rec = dict(arch=arch, shape=shape,
+                           mesh="2x16x16" if mp else "16x16",
+                           status="failed", error=str(e)[:2000],
+                           traceback=traceback.format_exc()[-4000:])
+                print(f"[FAIL] {tag}: {e}", flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

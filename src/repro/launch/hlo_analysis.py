@@ -1,0 +1,54 @@
+"""HLO-level breakdown tooling for the §Perf hillclimb.
+
+Dumps the top collective ops (by ring bytes) and top N largest-operand ops
+from an optimized HLO text — the 'profile' available without hardware.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from .roofline import _GROUPS_BRACE_RE, _GROUPS_RE, _SHAPE_RE, _group_size, \
+    _ring_bytes, _shape_bytes, _COLLECTIVES
+
+
+def top_collectives(hlo_text: str, k: int = 15):
+    """Largest collectives by bytes-moved, with op metadata hints."""
+    rows = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES)
+                      + r")(?:-start)?\(", s)
+        if not m or re.search(r"-done\(", s):
+            continue
+        payload = _shape_bytes(m.group(1))
+        g = _group_size(s)
+        moved = _ring_bytes(m.group(2), payload, g)
+        meta = ""
+        mm = re.search(r'op_name="([^"]+)"', s)
+        if mm:
+            meta = mm.group(1)[-90:]
+        rows.append((moved, m.group(2), m.group(1)[:60], g, meta))
+    rows.sort(reverse=True)
+    agg = defaultdict(float)
+    for moved, op, shape, g, meta in rows:
+        key = re.sub(r"\d+", "#", meta.split("/")[-1]) if meta else op
+        agg[key] += moved
+    return rows[:k], sorted(agg.items(), key=lambda kv: -kv[1])[:k]
+
+
+def print_report(hlo_path: str, k: int = 15):
+    txt = open(hlo_path).read()
+    rows, agg = top_collectives(txt, k)
+    total = sum(r[0] for r in rows)
+    print(f"== top {k} collectives (of visible {total / 1e9:.2f} GB) ==")
+    for moved, op, shape, g, meta in rows:
+        print(f"  {moved / 1e9:8.3f} GB  {op:<20} g={g:<4} {shape:<40} {meta}")
+    print("== aggregated by op_name suffix ==")
+    for key, v in agg:
+        print(f"  {v / 1e9:8.3f} GB  {key}")
+
+
+if __name__ == "__main__":
+    import sys
+    print_report(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 15)

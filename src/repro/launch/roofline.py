@@ -1,0 +1,152 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip — constants from the assignment):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI per link      : ~50 GB/s
+
+Terms (seconds, per step, per chip — cost_analysis() and the SPMD-partitioned
+HLO are already per-device):
+    compute    = HLO_FLOPs / peak
+    memory     = HLO_bytes / HBM_bw
+    collective = Σ_ops ring_bytes_moved(op) / link_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _ring_bytes(op: str, payload: int, g: int) -> float:
+    """Bytes moved per chip under a ring schedule."""
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g * payload
+    if op == "all-gather":              # payload = full result
+        return (g - 1) / g * payload
+    if op == "reduce-scatter":          # payload = result (scattered piece)
+        return float((g - 1)) * payload
+    if op == "all-to-all":
+        return (g - 1) / g * payload
+    if op == "collective-permute":
+        return float(payload)
+    return 0.0
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, float]
+    total_bytes: float
+    count: int
+    lines: List[str]
+
+
+def parse_collectives(hlo_text: str, max_lines: int = 0) -> CollectiveStats:
+    per_op = {op: 0.0 for op in _COLLECTIVES}
+    count = 0
+    kept: List[str] = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES)
+                      + r")(?:-start)?\(", stripped)
+        if not m:
+            continue
+        # ignore the -done halves of async pairs (bytes counted at -start)
+        if re.search(r"(" + "|".join(_COLLECTIVES) + r")-done\(", stripped):
+            continue
+        result_type, op = m.group(1), m.group(2)
+        payload = _shape_bytes(result_type)
+        g = _group_size(stripped)
+        per_op[op] += _ring_bytes(op, payload, g)
+        count += 1
+        if max_lines and len(kept) < max_lines:
+            kept.append(stripped[:160])
+    return CollectiveStats(per_op, sum(per_op.values()), count, kept)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D (training) or 2·N_active·D (inference)."""
+    from repro.models.model import lm_metas
+    from repro.models.params import _walk
+    import numpy as np
+    total = 0
+    active = 0.0
+    for path, meta in _walk(lm_metas(cfg)):
+        n = int(np.prod(meta.shape))
+        total += n
+        if path[-1] == "embed":
+            # gather costs ~0 flops; the table only "computes" when tied
+            active += n if cfg.tie_embeddings else 0
+        elif "experts" in meta.axes:
+            # routed expert weights: top_k of E active per token
+            active += n * cfg.moe_top_k / max(1, cfg.n_experts)
+        else:
+            active += n
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * active * tokens, total
+
+
+def roofline_terms(cost: Dict, coll: CollectiveStats, n_chips: int) -> Dict:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll.total_bytes / LINK_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_chip": flops,
+        "bytes_per_chip": byts,
+        "collective_bytes_per_chip": coll.total_bytes,
+        "collective_ops": coll.count,
+        "collective_per_op": coll.per_op,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": max(t_compute, t_memory, t_coll),
+    }

@@ -1,0 +1,138 @@
+"""jit-ready step functions + ShapeDtypeStruct input specs per (arch, shape).
+
+These are shared by the real drivers (train.py / serve.py) and the dry-run:
+the SAME functions are lowered in both, so the dry-run proves the production
+step compiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel import sharding as S
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, mesh=None):
+    from repro.parallel.api import use_mesh
+
+    def train_step(params, opt_state, batch):
+        with use_mesh(mesh):                       # trace-time constraints
+            (loss, parts), grads = jax.value_and_grad(
+                lambda p: M.loss_fn(cfg, p, batch), has_aux=True)(params)
+            new_params, new_opt, om = adamw.update(opt_cfg, grads, opt_state,
+                                                   params)
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   **om}
+        return new_params, new_opt, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, batch: int, seq: int, mesh=None):
+    from repro.parallel.api import use_mesh
+
+    def shard_cache(cache):
+        # §Perf it.5: an unconstrained cache lets XLA replicate the batch
+        # through every attention layer of the prefill
+        if mesh is None:
+            return cache
+        from repro.parallel.sharding import cache_shardings
+        return jax.tree.map(jax.lax.with_sharding_constraint, cache,
+                            cache_shardings(cfg, mesh, cache, batch))
+
+    if cfg.enc_dec:
+        def prefill_step(params, frames):
+            with use_mesh(mesh):
+                cache = shard_cache(M.init_cache(cfg, batch, seq, s_enc=seq))
+                enc_out, cache = M.encdec_prefill(cfg, params, frames, cache)
+            return enc_out, shard_cache(cache)
+        return prefill_step
+
+    def prefill_step(params, tokens):
+        with use_mesh(mesh):
+            cache = shard_cache(M.init_cache(cfg, batch, seq))
+            logits, cache = M.prefill(cfg, params, tokens, cache)
+        return logits, shard_cache(cache)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None):
+    from repro.parallel.api import use_mesh
+
+    def serve_step(params, cache, token, pos):
+        with use_mesh(mesh):
+            return M.decode_step(cfg, params, cache, token, pos)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.n_image_tokens:
+            specs["images"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.d_image), jnp.float32)
+        if cfg.enc_dec:
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_frame),
+                                                   jnp.float32)
+        return specs
+    if shape.kind == "prefill":
+        if cfg.enc_dec:
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_frame),
+                                                   jnp.float32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: M.init_cache(cfg, b, s, s_enc=s if cfg.enc_dec else 0))
+        return {"cache": cache,
+                "token": jax.ShapeDtypeStruct((b, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+    raise ValueError(shape.kind)
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    params = M.abstract_params(cfg)
+    opt_state = jax.eval_shape(functools.partial(adamw.init, opt_cfg), params)
+    return params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# Shardings per cell
+# ---------------------------------------------------------------------------
+
+def train_shardings(cfg, mesh, opt_cfg):
+    pshard = S.params_shardings(cfg, mesh)
+    opt_shard = {"m": pshard, "v": pshard,
+                 "step": NamedSharding(mesh, P())}
+    shape_b = lambda extra: None  # noqa: E731
+    def batch_shardings(specs):
+        out = {}
+        for k, v in specs.items():
+            out[k] = NamedSharding(mesh, S.batch_spec(mesh, v.shape[0],
+                                                      v.ndim - 1))
+        return out
+    return pshard, opt_shard, batch_shardings
+
+
+def decode_shardings(cfg, mesh, cache_tree, batch: int):
+    pshard = S.params_shardings(cfg, mesh)
+    cshard = S.cache_shardings(cfg, mesh, cache_tree, batch)
+    tok = NamedSharding(mesh, S.batch_spec(mesh, batch, 1))
+    pos = NamedSharding(mesh, P())
+    return pshard, cshard, tok, pos

@@ -1,0 +1,4 @@
+"""Composable model zoo (pure JAX) for the 10 assigned architectures."""
+from . import attention, blocks, layers, moe, params, ssm  # noqa: F401
+from .model import (abstract_params, decode_step, encdec_prefill, forward,  # noqa: F401
+                    init_cache, init_params, lm_metas, loss_fn, prefill)

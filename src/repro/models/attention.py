@@ -1,0 +1,155 @@
+"""Attention: XLA-lowerable blocked flash (train/prefill) + decode paths.
+
+Two implementations of the same math:
+
+* ``repro.kernels.flash_attention`` — the Pallas TPU kernel (hot path on
+  real hardware; validated in interpret mode).
+* this module — pure-jnp blocked flash used for pjit lowering (dry-run /
+  CPU smoke) and as the multi-device reference.  Sliding-window layers use a
+  *static KV span gather* so the HLO FLOPs reflect the true sub-quadratic
+  cost (the inspector-style schedule, folded into static shapes).
+
+GQA everywhere is grouped einsum — KV heads are never materialized G times.
+Shapes: q (B, H, S, D); k, v (B, Hkv, S, D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rotary, softcap
+
+NEG_INF = -1e30
+
+
+class AttnSpec(NamedTuple):
+    causal: bool = True
+    window: int = 0          # 0 = global
+    softcap: float = 0.0
+    scale: Optional[float] = None
+
+
+def _block_attn(q, k, v, qpos, kpos, spec: AttnSpec):
+    """One (q-block, kv-block) tile: returns (m, l, acc) contributions.
+
+    q: (B, Hkv, G, bq, D); k/v: (B, Hkv, bk, D); qpos: (bq,), kpos: (bk,).
+    """
+    d = q.shape[-1]
+    scale = spec.scale if spec.scale is not None else d ** -0.5
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if spec.softcap > 0:
+        s = softcap(s, spec.softcap)
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if spec.causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if spec.window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - spec.window
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1)                                   # (B,Hkv,G,bq)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    # §Perf it.2: probabilities in bf16 for the PV matmul (stats stay f32);
+    # halves the dominant S²-sized HBM traffic of the jnp attention path.
+    acc = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def _merge(m1, l1, a1, m2, l2, a2):
+    m = jnp.maximum(m1, m2)
+    e1, e2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+    return m, l1 * e1 + l2 * e2, a1 * e1[..., None] + a2 * e2[..., None]
+
+
+def flash_attention_jnp(q, k, v, spec: AttnSpec, *, bq: int = 1024,
+                        bk: int = 1024):
+    """Blocked flash attention, scan over q blocks × kv blocks."""
+    b, h, s_len, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    bq = min(bq, s_len)
+    bk = min(bk, s_len)
+    assert s_len % bq == 0 and s_len % bk == 0
+    nq, nk = s_len // bq, s_len // bk
+    qg = q.reshape(b, hkv, g, s_len, d)
+
+    # windowed fast path only pays when the span is a strict subset of seq
+    if spec.window > 0 and spec.causal and spec.window + bq < s_len:
+        return _windowed(qg, k, v, spec, bq).reshape(b, h, s_len, d)
+
+    def q_block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(qg, qi * bq, bq, axis=3)
+        qpos = qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, j):
+            kb = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, axis=2)
+            kpos = j * bk + jnp.arange(bk)
+            m2, l2, a2 = _block_attn(qb, kb, vb, qpos, kpos, spec)
+            return _merge(*carry, m2, l2, a2), None
+
+        m0 = jnp.full((b, hkv, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(q_block, jnp.arange(nq))           # (nq,B,Hkv,G,bq,D)
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, s_len, d)
+    return out.reshape(b, h, s_len, d)
+
+
+def _windowed(qg, k, v, spec: AttnSpec, bq: int):
+    """Sliding-window attention with a static KV-span gather per q block.
+
+    HLO FLOPs scale with window, not seq — the static embodiment of the
+    RIR block schedule (DESIGN.md §4).
+    """
+    b, hkv, g, s_len, d = qg.shape
+    span = spec.window + bq                      # kv span covering the block
+    nq = s_len // bq
+
+    def q_block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(qg, qi * bq, bq, axis=3)
+        qpos = qi * bq + jnp.arange(bq)
+        start = jnp.maximum(qi * bq + bq - span, 0)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, span, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, span, axis=2)
+        kpos = start + jnp.arange(span)
+        m, l, acc = _block_attn(qb, kb, vb, qpos, kpos, spec)
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(qg.dtype)
+
+    out = jax.lax.map(q_block, jnp.arange(nq))
+    return jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, s_len, d)
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos, pos, spec: AttnSpec):
+    """Single-token attention against a (possibly ring) KV cache.
+
+    q: (B, H, 1, D); caches: (B, Hkv, S_cache, D); ``slot_pos``: (S_cache,)
+    absolute position stored in each cache slot (-1 = empty; ring caches
+    overwrite slots mod window, so slot index ≠ position); pos: () scalar.
+    """
+    b, h, _, d = q.shape
+    hkv = k_cache.shape[1]
+    g = h // hkv
+    scale = spec.scale if spec.scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    if spec.softcap > 0:
+        s = softcap(s, spec.softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if spec.window > 0:
+        valid &= slot_pos > pos - spec.window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = s - s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, 1, d).astype(q.dtype)

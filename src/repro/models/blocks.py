@@ -1,0 +1,613 @@
+"""Transformer-block assembly for every assigned family.
+
+A block = mixer (attn | rwkv | hymba) + ffn (swiglu | moe | rwkv_cm) with
+pre-norms (and gemma-style post-norms).  Every block provides three entry
+points with identical parameters:
+
+  * ``block_forward`` — full-sequence (train / prefill math)
+  * ``block_prefill`` — forward + emit decode cache
+  * ``block_decode``  — single token with cache
+
+Param declarations (Meta) live beside the compute so shapes cannot drift.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (AttnSpec, decode_attention, flash_attention_jnp)
+from .layers import dense, grad_fence, rms_norm, rotary, swiglu
+from .moe import moe_ffn
+from .params import Meta
+from .ssm import rwkv6_chunked_jnp, rwkv6_decode_step
+
+
+# ---------------------------------------------------------------------------
+# Meta declarations
+# ---------------------------------------------------------------------------
+
+def _attn_metas(cfg) -> Dict[str, Meta]:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    m = {
+        "wq": Meta((d, h * dh), ("embed", "heads")),
+        "wk": Meta((d, hkv * dh), ("embed", "heads")),
+        "wv": Meta((d, hkv * dh), ("embed", "heads")),
+        "wo": Meta((h * dh, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        m["q_norm"] = Meta((dh,), (None,), init="ones")
+        m["k_norm"] = Meta((dh,), (None,), init="ones")
+    return m
+
+
+def _ssm_metas(cfg) -> Dict[str, Meta]:
+    """Hymba-style SSM heads: state=ssm_state per head, value=d_head."""
+    d, h, dh, s = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.ssm_state
+    return {
+        "wr_s": Meta((d, h * s), ("embed", "heads")),
+        "wk_s": Meta((d, h * s), ("embed", "heads")),
+        "wv_s": Meta((d, h * dh), ("embed", "heads")),
+        "ww_s": Meta((d, h * s), ("embed", "heads")),
+        "wb_s": Meta((h * s,), (None,), init="zeros"),
+        "wo_s": Meta((h * dh, d), ("heads", "embed")),
+        "norm_a": Meta((h * dh,), (None,), init="ones"),
+        "norm_s": Meta((h * dh,), (None,), init="ones"),
+    }
+
+
+def _rwkv_metas(cfg) -> Dict[str, Meta]:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    return {
+        "mu_r": Meta((d,), (None,), init="zeros"),
+        "mu_k": Meta((d,), (None,), init="zeros"),
+        "mu_v": Meta((d,), (None,), init="zeros"),
+        "mu_w": Meta((d,), (None,), init="zeros"),
+        "mu_g": Meta((d,), (None,), init="zeros"),
+        "wr": Meta((d, h * dh), ("embed", "heads")),
+        "wk": Meta((d, h * dh), ("embed", "heads")),
+        "wv": Meta((d, h * dh), ("embed", "heads")),
+        "ww": Meta((d, h * dh), ("embed", "heads"), scale=0.01),
+        "w_bias": Meta((h * dh,), (None,), init="zeros"),
+        "wg": Meta((d, h * dh), ("embed", "heads")),
+        "u": Meta((h, dh), (None, None), scale=0.5),
+        "wo": Meta((h * dh, d), ("heads", "embed")),
+        "out_norm": Meta((h * dh,), (None,), init="ones"),
+    }
+
+
+def _ffn_metas(cfg) -> Dict[str, Meta]:
+    d = cfg.d_model
+    if cfg.ffn == "moe":
+        e, dff = cfg.n_experts, cfg.d_ff_expert
+        m = {
+            "router": Meta((d, e), ("embed", None), scale=0.02),
+            "w_gate": Meta((e, d, dff), ("experts", "embed", None)),
+            "w_up": Meta((e, d, dff), ("experts", "embed", None)),
+            "w_down": Meta((e, dff, d), ("experts", None, "embed")),
+        }
+        if cfg.n_shared_experts:
+            sdff = dff * cfg.n_shared_experts
+            m.update({
+                "shared_gate": Meta((d, sdff), ("embed", "mlp")),
+                "shared_up": Meta((d, sdff), ("embed", "mlp")),
+                "shared_down": Meta((sdff, d), ("mlp", "embed")),
+            })
+        return m
+    if cfg.ffn == "rwkv_cm":
+        return {
+            "mu_cm": Meta((cfg.d_model,), (None,), init="zeros"),
+            "w_rcm": Meta((d, d), ("embed", "embed2")),
+            "w_in": Meta((d, cfg.d_ff), ("embed", "mlp")),
+            "w_out": Meta((cfg.d_ff, d), ("mlp", "embed")),
+        }
+    return {
+        "w_gate": Meta((d, cfg.d_ff), ("embed", "mlp")),
+        "w_up": Meta((d, cfg.d_ff), ("embed", "mlp")),
+        "w_down": Meta((cfg.d_ff, d), ("mlp", "embed")),
+    }
+
+
+def block_metas(cfg, layer_type: str) -> Dict:
+    d = cfg.d_model
+    m = {"ln1": Meta((d,), (None,), init="zeros" if cfg.gemma_style else "ones"),
+         "ln2": Meta((d,), (None,), init="zeros" if cfg.gemma_style else "ones")}
+    if cfg.post_norm:
+        m["ln1_post"] = Meta((d,), (None,),
+                             init="zeros" if cfg.gemma_style else "ones")
+        m["ln2_post"] = Meta((d,), (None,),
+                             init="zeros" if cfg.gemma_style else "ones")
+    if cfg.mixer == "attn":
+        m["attn"] = _attn_metas(cfg)
+    elif cfg.mixer == "rwkv":
+        m["rwkv"] = _rwkv_metas(cfg)
+    elif cfg.mixer == "hymba":
+        m["attn"] = _attn_metas(cfg)
+        m["ssm"] = _ssm_metas(cfg)
+    if layer_type == "decoder":       # enc-dec: cross-attention sub-layer
+        m["xattn"] = _attn_metas(cfg)
+        m["lnx"] = Meta((d,), (None,), init="ones")
+    m["ffn"] = _ffn_metas(cfg)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Mixer: attention
+# ---------------------------------------------------------------------------
+
+def _attn_spec(cfg, layer_type: str) -> AttnSpec:
+    window = cfg.window if layer_type == "local" else 0
+    causal = layer_type != "encoder"
+    return AttnSpec(causal=causal, window=window, softcap=cfg.attn_softcap,
+                    scale=cfg.d_head ** -0.5)
+
+
+def _theta(cfg, layer_type: str) -> float:
+    if layer_type == "local" and cfg.rope_theta_local:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+def _qkv(cfg, p, x, positions, layer_type):
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = dense(x, p["wq"]).reshape(b, s, h, dh)
+    k = dense(x, p["wk"]).reshape(b, s, hkv, dh)
+    v = dense(x, p["wv"]).reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q, k = q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3)
+    if cfg.use_rope:
+        theta = _theta(cfg, layer_type)
+        q = rotary(q, positions[:, None, :], theta=theta)
+        k = rotary(k, positions[:, None, :], theta=theta)
+    v = v.transpose(0, 2, 1, 3)
+    return q, k, v    # (B, H, S, D), (B, Hkv, S, D)
+
+
+def attn_forward(cfg, p, x, positions, layer_type, prefix: int = 0):
+    q, k, v = _qkv(cfg, p, x, positions, layer_type)
+    spec = _attn_spec(cfg, layer_type)
+    if cfg.prefix_lm and prefix > 0:
+        out = _prefix_attention(q, k, v, spec, prefix)
+    else:
+        out = flash_attention_jnp(q, k, v, spec)
+    b, h, s, dh = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return dense(out, p["wo"])
+
+
+def _prefix_attention(q, k, v, spec: AttnSpec, prefix: int):
+    """Prefix-LM (paligemma): bidirectional over the first ``prefix``
+    positions, causal elsewhere.  Uses plain masked attention (prefix cells
+    are a small fraction of the 4k/32k shapes)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, s, d)
+    scale = spec.scale if spec.scale is not None else d ** -0.5
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    mask = (pos[None, :] <= pos[:, None]) | (pos[None, :] < prefix)
+    logits = jnp.where(mask, logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", pr, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def attn_make_cache(cfg, layer_type, batch, max_seq, dtype):
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    s_cache = min(cfg.window, max_seq) if (
+        layer_type == "local" and cfg.window) else max_seq
+    return {
+        "k": jnp.zeros((batch, hkv, s_cache, dh), dtype),
+        "v": jnp.zeros((batch, hkv, s_cache, dh), dtype),
+        "slot_pos": jnp.full((s_cache,), -1, jnp.int32),
+    }
+
+
+def attn_prefill(cfg, p, x, positions, layer_type, cache):
+    """Forward + populate cache (last ``s_cache`` positions for ring)."""
+    q, k, v = _qkv(cfg, p, x, positions, layer_type)
+    spec = _attn_spec(cfg, layer_type)
+    out = flash_attention_jnp(q, k, v, spec)
+    b, h, s, dh = out.shape
+    s_cache = cache["k"].shape[2]
+    if s_cache >= s:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=2)
+        slot_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], positions[0].astype(jnp.int32), 0, axis=0)
+    else:      # ring: keep the last s_cache tokens, slot = pos % s_cache
+        tail = s - s_cache
+        k_t = jax.lax.dynamic_slice_in_dim(k, tail, s_cache, axis=2)
+        v_t = jax.lax.dynamic_slice_in_dim(v, tail, s_cache, axis=2)
+        pos_t = jax.lax.dynamic_slice_in_dim(positions[0], tail, s_cache, 0)
+        slot = (pos_t % s_cache).astype(jnp.int32)
+        kc = cache["k"].at[:, :, slot].set(k_t)
+        vc = cache["v"].at[:, :, slot].set(v_t)
+        slot_pos = cache["slot_pos"].at[slot].set(pos_t.astype(jnp.int32))
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return dense(out, p["wo"]), {"k": kc, "v": vc, "slot_pos": slot_pos}
+
+
+def attn_decode(cfg, p, x_t, cache, pos, layer_type):
+    """x_t: (B, 1, d); cache k/v: (B, Hkv, S_cache, D); pos: scalar."""
+    b = x_t.shape[0]
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = dense(x_t, p["wq"]).reshape(b, 1, h, dh)
+    k = dense(x_t, p["wk"]).reshape(b, 1, hkv, dh)
+    v = dense(x_t, p["wv"]).reshape(b, 1, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    theta = _theta(cfg, layer_type)
+    pos_arr = jnp.full((b, 1, 1), pos)
+    q = rotary(q.transpose(0, 2, 1, 3), pos_arr, theta=theta)
+    k = rotary(k.transpose(0, 2, 1, 3), pos_arr, theta=theta)
+    v = v.transpose(0, 2, 1, 3)
+    s_cache = cache["k"].shape[2]
+    slot = (pos % s_cache).astype(jnp.int32)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    spec = _attn_spec(cfg, layer_type)
+    out = decode_attention(q, kc, vc, slot_pos, pos, spec)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
+    return dense(out, p["wo"]), {"k": kc, "v": vc, "slot_pos": slot_pos}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec / whisper)
+# ---------------------------------------------------------------------------
+
+def cross_attn_forward(cfg, p, h, enc_out):
+    """h: (B, S_dec, d); enc_out: (B, S_enc, d). Full (unmasked) attention."""
+    b, s, _ = h.shape
+    hh, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s_enc = enc_out.shape[1]
+    q = dense(h, p["wq"]).reshape(b, s, hh, dh).transpose(0, 2, 1, 3)
+    k = dense(enc_out, p["wk"]).reshape(b, s_enc, hkv, dh).transpose(0, 2, 1, 3)
+    v = dense(enc_out, p["wv"]).reshape(b, s_enc, hkv, dh).transpose(0, 2, 1, 3)
+    spec = AttnSpec(causal=False, window=0, softcap=0.0,
+                    scale=dh ** -0.5)
+    out = _xattn_blocks(q, k, v, spec)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hh * dh)
+    return dense(out, p["wo"])
+
+
+def _xattn_blocks(q, k, v, spec):
+    """Non-causal attention usable with unequal q/kv lengths."""
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * spec.scale
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", pr, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def cross_attn_decode(cfg, p, x_t, xk, xv):
+    """x_t: (B,1,d); xk/xv: precomputed encoder K/V (B,Hkv,S_enc,Dh)."""
+    b = x_t.shape[0]
+    hh, dh = cfg.n_heads, cfg.d_head
+    q = dense(x_t, p["wq"]).reshape(b, 1, hh, dh).transpose(0, 2, 1, 3)
+    spec = AttnSpec(causal=False, window=0, softcap=0.0, scale=dh ** -0.5)
+    s_enc = xk.shape[2]
+    slot_pos = jnp.arange(s_enc, dtype=jnp.int32)
+    out = decode_attention(q, xk, xv, slot_pos, jnp.int32(s_enc), spec)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, hh * dh)
+    return dense(out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Mixer: RWKV6
+# ---------------------------------------------------------------------------
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _rwkv_project(cfg, p, x, x_prev):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    r = dense(_lerp(x, x_prev, p["mu_r"]), p["wr"])
+    k = dense(_lerp(x, x_prev, p["mu_k"]), p["wk"])
+    v = dense(_lerp(x, x_prev, p["mu_v"]), p["wv"])
+    g = dense(_lerp(x, x_prev, p["mu_g"]), p["wg"])
+    wraw = dense(_lerp(x, x_prev, p["mu_w"]), p["ww"]) + p["w_bias"].astype(
+        x.dtype)
+    # decay in (0,1): exp(-softplus(-wraw)-0.5) keeps a useful dynamic range
+    w = jnp.exp(-jnp.exp(wraw.astype(jnp.float32) - 0.5))
+    w = jnp.clip(w, 1e-6, 1 - 1e-6)
+
+    def heads(z):
+        return z.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    return heads(r), heads(k), v.reshape(b, s, h, dh).transpose(0, 2, 1, 3), \
+        heads(w), g
+
+
+def rwkv_forward(cfg, p, x, state_in=None):
+    """x: (B, S, d). Returns (out, (final_wkv_state, last_x))."""
+    b, s, d = x.shape
+    x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    if state_in is not None:
+        x_prev = x_prev.at[:, 0].set(state_in["shift"].astype(x.dtype))
+    r, k, v, w, g = _rwkv_project(cfg, p, x, x_prev)
+    o, wkv_state = rwkv6_chunked_jnp(r, k, v, w, p["u"], chunk=min(64, s))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1).astype(x.dtype)
+    o = rms_norm(o, p["out_norm"])
+    o = o * jax.nn.silu(g)
+    out = dense(o, p["wo"])
+    return out, {"wkv": wkv_state, "shift": x[:, -1]}
+
+
+def rwkv_make_cache(cfg, batch, dtype):
+    h, dh = cfg.n_heads, cfg.d_head
+    return {"wkv": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "shift": jnp.zeros((batch, cfg.d_model), dtype),
+            "shift_cm": jnp.zeros((batch, cfg.d_model), dtype)}
+
+
+def rwkv_decode(cfg, p, x_t, cache):
+    """x_t: (B, 1, d)."""
+    b, _, d = x_t.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x = x_t[:, 0]
+    x_prev = cache["shift"].astype(x.dtype)
+    r, k, v, w, g = _rwkv_project(cfg, p, x[:, None, :], x_prev[:, None, :])
+    r1, k1, v1, w1 = (z[:, :, 0, :] for z in (r, k, v, w))
+    o, state = rwkv6_decode_step(r1, k1, v1, w1, p["u"], cache["wkv"])
+    o = o.reshape(b, h * dh).astype(x.dtype)
+    o = rms_norm(o, p["out_norm"]) * jax.nn.silu(g[:, 0])
+    out = dense(o, p["wo"])[:, None, :]
+    return out, {"wkv": state, "shift": x, "shift_cm": cache["shift_cm"]}
+
+
+def rwkv_channel_mix(cfg, p, x, x_prev):
+    xk = _lerp(x, x_prev, p["mu_cm"])
+    rgate = jax.nn.sigmoid(dense(xk, p["w_rcm"]))
+    hidden = jnp.square(jax.nn.relu(dense(xk, p["w_in"])))
+    return rgate * dense(hidden, p["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Mixer: Hymba (parallel attention + SSM heads)
+# ---------------------------------------------------------------------------
+
+def _ssm_project(cfg, p, x):
+    b, s, d = x.shape
+    h, dh, st = cfg.n_heads, cfg.d_head, cfg.ssm_state
+    r = dense(x, p["wr_s"]).reshape(b, s, h, st).transpose(0, 2, 1, 3)
+    k = dense(x, p["wk_s"]).reshape(b, s, h, st).transpose(0, 2, 1, 3)
+    v = dense(x, p["wv_s"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    wraw = dense(x, p["ww_s"]) + p["wb_s"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp(wraw.astype(jnp.float32) - 0.5))
+    w = jnp.clip(w, 1e-6, 1 - 1e-6)
+    w = w.reshape(b, s, h, st).transpose(0, 2, 1, 3)
+    return r, k, v, w
+
+
+def hymba_forward(cfg, p, x, positions, layer_type):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    # attention branch (pre-projection heads)
+    q, k, v = _qkv(cfg, p["attn"], x, positions, layer_type)
+    spec = _attn_spec(cfg, layer_type)
+    a = flash_attention_jnp(q, k, v, spec)
+    a = a.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    # SSM branch (u = 0: no bonus term)
+    r, ks, vs, w = _ssm_project(cfg, p["ssm"], x)
+    u0 = jnp.zeros((h, cfg.ssm_state), jnp.float32)
+    o, _ = rwkv6_chunked_jnp(r, ks, vs, w, u0, chunk=min(64, s))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh).astype(x.dtype)
+    # normalize-and-average fusion (Hymba §3), then output proj
+    fused = 0.5 * (rms_norm(a, p["ssm"]["norm_a"])
+                   + rms_norm(o, p["ssm"]["norm_s"]))
+    return dense(fused, p["attn"]["wo"])
+
+
+def hymba_make_cache(cfg, layer_type, batch, max_seq, dtype):
+    c = attn_make_cache(cfg, layer_type, batch, max_seq, dtype)
+    c["ssm_state"] = jnp.zeros(
+        (batch, cfg.n_heads, cfg.ssm_state, cfg.d_head), jnp.float32)
+    return c
+
+
+def _attn_decode_heads(cfg, p, x_t, cache, pos, layer_type):
+    """attn_decode without the output projection (returns flat heads)."""
+    b = x_t.shape[0]
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = dense(x_t, p["wq"]).reshape(b, 1, h, dh)
+    k = dense(x_t, p["wk"]).reshape(b, 1, hkv, dh)
+    v = dense(x_t, p["wv"]).reshape(b, 1, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    theta = _theta(cfg, layer_type)
+    pos_arr = jnp.full((b, 1, 1), pos)
+    q = rotary(q.transpose(0, 2, 1, 3), pos_arr, theta=theta)
+    k = rotary(k.transpose(0, 2, 1, 3), pos_arr, theta=theta)
+    v = v.transpose(0, 2, 1, 3)
+    s_cache = cache["k"].shape[2]
+    slot = (pos % s_cache).astype(jnp.int32)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    spec = _attn_spec(cfg, layer_type)
+    out = decode_attention(q, kc, vc, slot_pos, pos, spec)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
+    return out, {"k": kc, "v": vc, "slot_pos": slot_pos}
+
+
+def hymba_decode(cfg, p, x_t, cache, pos, layer_type):
+    b = x_t.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+    a, attn_cache = _attn_decode_heads(cfg, p["attn"], x_t, cache, pos,
+                                       layer_type)
+    r, ks, vs, w = _ssm_project(cfg, p["ssm"], x_t)
+    u0 = jnp.zeros((h, cfg.ssm_state), jnp.float32)
+    o, state = rwkv6_decode_step(r[:, :, 0], ks[:, :, 0], vs[:, :, 0],
+                                 w[:, :, 0], u0, cache["ssm_state"])
+    o = o.reshape(b, 1, h * dh).astype(x_t.dtype)
+    fused = 0.5 * (rms_norm(a, p["ssm"]["norm_a"])
+                   + rms_norm(o, p["ssm"]["norm_s"]))
+    out = dense(fused, p["attn"]["wo"])
+    new_cache = dict(attn_cache)
+    new_cache["ssm_state"] = state
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Block assembly
+# ---------------------------------------------------------------------------
+
+def _norm(cfg, x, w):
+    return rms_norm(x, w, plus_one=cfg.gemma_style)
+
+
+def _apply_ffn(cfg, p, x, x_prev_for_cm=None):
+    """Returns (out, aux_loss)."""
+    if cfg.ffn == "moe":
+        return moe_ffn(x, p, n_experts=cfg.n_experts, top_k=cfg.moe_top_k,
+                       capacity_factor=cfg.capacity_factor)
+    if cfg.ffn == "rwkv_cm":
+        return rwkv_channel_mix(cfg, p, x, x_prev_for_cm), 0.0
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), 0.0
+
+
+def block_forward(cfg, layer_type, p, x, positions, prefix: int = 0,
+                  enc_out=None):
+    """Full-sequence block. Returns (x, aux_loss)."""
+    from jax.ad_checkpoint import checkpoint_name
+    h = grad_fence(_norm(cfg, x, p["ln1"]))
+    if cfg.mixer == "attn":
+        mixed = attn_forward(cfg, p["attn"], h, positions, layer_type, prefix)
+    elif cfg.mixer == "rwkv":
+        mixed, _ = rwkv_forward(cfg, p["rwkv"], h)
+    elif cfg.mixer == "hymba":
+        mixed = hymba_forward(cfg, p, h, positions, layer_type)
+    else:
+        raise ValueError(cfg.mixer)
+    if cfg.post_norm:
+        mixed = _norm(cfg, mixed, p["ln1_post"])
+    # §Perf it.1: post-collective mixer output is a named save point — remat
+    # recomputes everything EXCEPT this, so the TP all-reduce (and the whole
+    # attention S² tile sweep) never re-runs in the backward pass.
+    mixed = checkpoint_name(mixed, "mixer_out")
+    x = x + mixed
+
+    if layer_type == "decoder" and enc_out is not None:
+        hx = _norm(cfg, x, p["lnx"])
+        x = x + cross_attn_forward(cfg, p["xattn"], hx, enc_out)
+
+    h2 = grad_fence(_norm(cfg, x, p["ln2"]))
+    h2_prev = jnp.concatenate([jnp.zeros_like(h2[:, :1]), h2[:, :-1]], axis=1)
+    out, aux = _apply_ffn(cfg, p["ffn"], h2, h2_prev)
+    if cfg.post_norm:
+        out = _norm(cfg, out, p["ln2_post"])
+    out = checkpoint_name(out, "ffn_out")
+    return x + out, aux
+
+
+def block_make_cache(cfg, layer_type, batch, max_seq, dtype):
+    if cfg.mixer == "attn":
+        return attn_make_cache(cfg, layer_type, batch, max_seq, dtype)
+    if cfg.mixer == "rwkv":
+        return rwkv_make_cache(cfg, batch, dtype)
+    if cfg.mixer == "hymba":
+        return hymba_make_cache(cfg, layer_type, batch, max_seq, dtype)
+    raise ValueError(cfg.mixer)
+
+
+def block_prefill(cfg, layer_type, p, x, positions, cache):
+    """Full-sequence forward that also populates the decode cache."""
+    h = _norm(cfg, x, p["ln1"])
+    if cfg.mixer == "attn":
+        mixed, cache = attn_prefill(cfg, p["attn"], h, positions, layer_type,
+                                    cache)
+    elif cfg.mixer == "rwkv":
+        mixed, st = rwkv_forward(cfg, p["rwkv"], h)
+        cache = dict(cache)
+        cache.update(wkv=st["wkv"], shift=st["shift"])
+    elif cfg.mixer == "hymba":
+        b, s, d = h.shape
+        hh, dh = cfg.n_heads, cfg.d_head
+        q, k, v = _qkv(cfg, p["attn"], h, positions, layer_type)
+        spec = _attn_spec(cfg, layer_type)
+        a = flash_attention_jnp(q, k, v, spec)
+        a = a.transpose(0, 2, 1, 3).reshape(b, s, hh * dh)
+        r, ks, vs, w = _ssm_project(cfg, p["ssm"], h)
+        u0 = jnp.zeros((hh, cfg.ssm_state), jnp.float32)
+        o, ssm_state = rwkv6_chunked_jnp(r, ks, vs, w, u0, chunk=min(64, s))
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, hh * dh).astype(h.dtype)
+        fused = 0.5 * (rms_norm(a, p["ssm"]["norm_a"])
+                       + rms_norm(o, p["ssm"]["norm_s"]))
+        mixed = dense(fused, p["attn"]["wo"])
+        # populate the attention cache exactly like attn_prefill
+        _, attn_cache = attn_prefill(cfg, p["attn"], h, positions, layer_type,
+                                     {k2: cache[k2] for k2 in
+                                      ("k", "v", "slot_pos")})
+        cache = dict(attn_cache)
+        cache["ssm_state"] = ssm_state
+    else:
+        raise ValueError(cfg.mixer)
+    if cfg.post_norm:
+        mixed = _norm(cfg, mixed, p["ln1_post"])
+    x = x + mixed
+
+    h2 = _norm(cfg, x, p["ln2"])
+    h2_prev = jnp.concatenate([jnp.zeros_like(h2[:, :1]), h2[:, :-1]], axis=1)
+    out, aux = _apply_ffn(cfg, p["ffn"], h2, h2_prev)
+    if cfg.ffn == "rwkv_cm":
+        cache = dict(cache)
+        cache["shift_cm"] = h2[:, -1]
+    if cfg.post_norm:
+        out = _norm(cfg, out, p["ln2_post"])
+    return x + out, cache, aux
+
+
+def block_decode(cfg, layer_type, p, x_t, cache, pos):
+    """One-token block step. Returns (x_t, new_cache)."""
+    h = _norm(cfg, x_t, p["ln1"])
+    if cfg.mixer == "attn":
+        new_attn = {k: cache[k] for k in ("k", "v", "slot_pos")}
+        mixed, new_attn = attn_decode(cfg, p["attn"], h, new_attn, pos,
+                                      layer_type)
+        new_cache = dict(cache)
+        new_cache.update(new_attn)
+        cache = new_cache
+    elif cfg.mixer == "rwkv":
+        mixed, rc = rwkv_decode(cfg, p["rwkv"], h, cache)
+        cache = rc
+    elif cfg.mixer == "hymba":
+        mixed, cache = hymba_decode(cfg, p, h, cache, pos, layer_type)
+    else:
+        raise ValueError(cfg.mixer)
+    if cfg.post_norm:
+        mixed = _norm(cfg, mixed, p["ln1_post"])
+    x_t = x_t + mixed
+
+    if layer_type == "decoder" and "xk" in cache:
+        hx = _norm(cfg, x_t, p["lnx"])
+        x_t = x_t + cross_attn_decode(cfg, p["xattn"], hx, cache["xk"],
+                                      cache["xv"])
+
+    h2 = _norm(cfg, x_t, p["ln2"])
+    if cfg.ffn == "rwkv_cm":
+        prev = cache["shift_cm"].astype(h2.dtype)[:, None, :]
+        out, aux = _apply_ffn(cfg, p["ffn"], h2, prev)
+        cache = dict(cache)
+        cache["shift_cm"] = h2[:, 0]
+    else:
+        out, aux = _apply_ffn(cfg, p["ffn"], h2, jnp.zeros_like(h2))
+    if cfg.post_norm:
+        out = _norm(cfg, out, p["ln2_post"])
+    return x_t + out, cache

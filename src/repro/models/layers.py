@@ -1,0 +1,141 @@
+"""Shared model layers: norms, rotary embeddings, dense projections, embed.
+
+All functions are pure; params are plain dicts produced by the Meta system.
+Compute dtype policy: inputs are cast to ``cfg.compute_dtype`` at block
+boundaries; norms and softmax statistics accumulate in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def grad_fence(x):
+    """Identity whose backward casts the cotangent to the primal dtype.
+
+    §Perf it.3: f32 leaks into the backward residual stream (attention
+    logits and norm statistics are f32; XLA's excess-precision elision then
+    keeps the converts out), which doubles every TP all-reduce payload.
+    Fencing the block inputs pins the reduced cotangents to bf16.
+    """
+    return x
+
+
+def _gf_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)     # dtype token (residuals must be jax types)
+
+
+def _gf_bwd(token, g):
+    return (g.astype(token.dtype),)
+
+
+grad_fence.defvjp(_gf_fwd, _gf_bwd)
+
+
+def rms_norm(x, weight, *, eps: float = 1e-6, plus_one: bool = False):
+    """RMSNorm with fp32 statistics. ``plus_one``: gemma-style (1 + w)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    return (y * w).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, *, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rotary(x, positions, *, theta: float = 10000.0):
+    """Apply rotary position embedding.  x: (..., S, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    """gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def dense(x, w, *, out_dims: int = 1):
+    """x @ w contracting x's last dim with w's first dim(s).
+
+    w may be (d_in, d_out) or (d_in, a, b) (fused head projections).
+    The output is grad-fenced (§Perf it.3): the backward dx partials that
+    feed the TP all-reduces are pinned to the compute dtype instead of the
+    f32 that leaks back from attention logits / norm statistics.
+    """
+    contract = x.ndim - 1
+    n_in = w.ndim - out_dims
+    assert n_in == 1, "weights are (d_in, ...)"
+    out = jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        dimension_numbers=(((contract,), (0,)), ((), ())),
+        preferred_element_type=x.dtype)
+    return grad_fence(out)
+
+
+def embed_lookup(tokens, table, *, scale: float | None = None,
+                 compute_dtype=jnp.bfloat16):
+    """Token embedding gather; optional sqrt(d) scaling (gemma)."""
+    x = jnp.take(table, tokens, axis=0).astype(compute_dtype)
+    if scale is not None:
+        x = x * jnp.asarray(scale, compute_dtype)
+    return x
+
+
+def unembed(x, table, *, cap: float = 0.0):
+    """Project to vocabulary logits (optionally soft-capped), fp32 out."""
+    logits = jax.lax.dot_general(
+        x, table.astype(x.dtype), (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return softcap(logits, cap)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: silu(x@Wg) * (x@Wu) @ Wd, used by every dense FFN here."""
+    g = jax.nn.silu(dense(x, w_gate))
+    u = dense(x, w_up)
+    return dense(g * u, w_down)
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    """Whisper-style GELU MLP with biases."""
+    h = jax.nn.gelu(dense(x, w_up) + b_up.astype(x.dtype))
+    return dense(h, w_down) + b_down.astype(x.dtype)
+
+
+def cross_entropy_loss(logits, labels, *, mask=None):
+    """Mean token cross-entropy in fp32. logits: (B,S,V), labels: (B,S).
+
+    The gold logit is extracted with a fused one-hot contraction rather than
+    ``take_along_axis`` — with vocab sharded over ``model``, a gather would
+    force XLA to all-gather the logits (the iteration-0 disaster recorded in
+    EXPERIMENTS.md §Perf); the contraction keeps them sharded and reduces
+    with a (B, S)-sized all-reduce instead.
+    """
+    v = logits.shape[-1]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (labels[..., None] == jnp.arange(v)[None, None, :])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,335 @@
+"""Model assembly: decoder-only LMs (9 archs) and enc-dec (whisper).
+
+Layers are stacked and scanned per *pattern period* (gemma3's 5 local + 1
+global = period 6), with any remainder layers as explicit tail blocks — so
+HLO size stays O(period) regardless of depth and per-layer-type FLOPs are
+exact.  Remat (full block) is applied inside the scan when cfg.remat.
+
+Entry points (all pure):
+  init_params / abstract_params / metas
+  forward(params, batch)            → (logits, aux_loss)
+  loss_fn(params, batch)            → scalar loss (+ router aux)
+  init_cache / prefill / decode_step
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.api import constrain
+
+from . import params as P
+from .blocks import (block_decode, block_forward, block_make_cache,
+                     block_metas, block_prefill)
+from .layers import cross_entropy_loss, dense, embed_lookup, rms_norm, unembed
+from .params import Meta
+
+
+# ---------------------------------------------------------------------------
+# Metas
+# ---------------------------------------------------------------------------
+
+def _stack(metas: Dict, n: int) -> Dict:
+    """Prepend a stacked (scanned) leading dim to every Meta in the tree."""
+    out = {}
+    for k, v in metas.items():
+        if isinstance(v, Meta):
+            out[k] = Meta((n,) + v.shape, ("layers",) + v.axes, v.init,
+                          v.scale, v.dtype)
+        else:
+            out[k] = _stack(v, n)
+    return out
+
+
+def lm_metas(cfg) -> Dict:
+    d = cfg.d_model
+    # §Perf it.4: the embedding table's d dim must NOT be FSDP-sharded —
+    # contracting x@table^T over a data-sharded dim makes XLA psum the
+    # (B, S, vocab/16) f32 logits over the data axis (128 GB/chip moved in
+    # the gemma3 prefill baseline).  vocab-only sharding keeps the unembed
+    # contraction local and the logits reduction disappears entirely.
+    metas: Dict = {
+        "embed": Meta((cfg.vocab_size, d), ("vocab", None), scale=1.0),
+        "final_norm": Meta((d,), (None,),
+                           init="zeros" if cfg.gemma_style else "ones"),
+    }
+    if not cfg.tie_embeddings:
+        metas["unembed"] = Meta((cfg.vocab_size, d), ("vocab", None),
+                                scale=d ** -0.5)
+    if cfg.n_image_tokens:
+        metas["img_proj"] = Meta((cfg.d_image, d), (None, "embed"))
+    if cfg.enc_dec:
+        metas["frame_proj"] = Meta((cfg.d_frame, d), (None, "embed"))
+        metas["enc_layers"] = _stack(block_metas(cfg, "encoder"),
+                                     cfg.n_enc_layers)
+        metas["enc_norm"] = Meta((d,), (None,), init="ones")
+        metas["layers"] = _stack(block_metas(cfg, "decoder"), cfg.n_layers)
+        return metas
+    if cfg.n_periods > 0:   # stacked even when unrolled (same param tree)
+        period = {f"pos{i}": block_metas(cfg, lt)
+                  for i, lt in enumerate(cfg.layer_pattern)}
+        metas["layers"] = _stack(period, cfg.n_periods)
+    for i, lt in enumerate(cfg.tail_layers):
+        metas[f"tail{i}"] = block_metas(cfg, lt)
+    return metas
+
+
+def init_params(cfg, key):
+    return P.init_params(lm_metas(cfg), key, cfg.pdtype)
+
+
+def abstract_params(cfg):
+    return P.abstract_params(lm_metas(cfg), cfg.pdtype)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _embed_in(cfg, params, tokens):
+    scale = cfg.d_model ** 0.5 if cfg.gemma_style else None
+    return embed_lookup(tokens, params["embed"], scale=scale,
+                        compute_dtype=cfg.cdtype)
+
+
+def _sinusoid(s, d, dtype):
+    pos = np.arange(s)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    table = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(table, dtype)
+
+
+def _out_head(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], plus_one=cfg.gemma_style)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(x, table, cap=cfg.final_softcap)
+    return constrain(logits, "dp", None, "vocab")
+
+
+def _scan_stack(cfg, stacked, x, positions, prefix, enc_out=None,
+                pattern=None):
+    pattern = pattern or cfg.layer_pattern
+
+    def body(carry, layer_p):
+        h, aux = carry
+        if "pos0" in layer_p:              # period-structured stack
+            for i, lt in enumerate(pattern):
+                h, a = block_forward(cfg, lt, layer_p[f"pos{i}"], h,
+                                     positions, prefix, enc_out)
+                aux = aux + a
+        else:                              # uniform stack (enc-dec)
+            h, a = block_forward(cfg, pattern[0], layer_p, h, positions,
+                                 prefix, enc_out)
+            aux = aux + a
+        return (h, aux), None
+
+    if cfg.remat:
+        # §Perf it.1 verdict: save_only_these_names("mixer_out","ffn_out")
+        # cut collectives only 12% (bwd still recomputes attention
+        # internals) while costing +14 GiB/chip of saved activations —
+        # REFUTED, reverted to full remat.  See EXPERIMENTS.md §Perf.
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, carry, stacked)
+    else:
+        # unrolled: same math and remat structure, straight-line HLO
+        # (used by the dry-run cost-extrapolation protocol)
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        for i in range(n):
+            carry, _ = body(carry, P.tree_slice(stacked, i))
+        x, aux = carry
+    return x, aux
+
+
+def forward(cfg, params, tokens, *, images=None, frames=None):
+    """tokens: (B, S). images: (B, n_img, d_image). frames: (B, S_enc, d_frame).
+
+    Returns (logits, aux_loss).  For VLM the image tokens are prepended;
+    logits cover the full (prefix + text) sequence.
+    """
+    if cfg.enc_dec:
+        return _encdec_forward(cfg, params, tokens, frames)
+    x = _embed_in(cfg, params, tokens)
+    prefix = 0
+    if cfg.n_image_tokens and images is not None:
+        img = dense(images.astype(cfg.cdtype), params["img_proj"])
+        x = jnp.concatenate([img, x], axis=1)
+        prefix = images.shape[1]
+    x = constrain(x, "dp", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    aux = jnp.zeros((), jnp.float32)
+    if "layers" in params:
+        x, aux = _scan_stack(cfg, params["layers"], x, positions, prefix)
+    for i, lt in enumerate(cfg.tail_layers):
+        x, a = block_forward(cfg, lt, params[f"tail{i}"], x, positions,
+                             prefix)
+        aux = aux + a
+    return _out_head(cfg, params, x), aux
+
+
+def _encdec_forward(cfg, params, tokens, frames):
+    b, s_enc, _ = frames.shape
+    xe = dense(frames.astype(cfg.cdtype), params["frame_proj"])
+    xe = xe + _sinusoid(s_enc, cfg.d_model, xe.dtype)[None]
+    pos_e = jnp.broadcast_to(jnp.arange(s_enc), (b, s_enc))
+    xe, _ = _scan_stack(cfg, params["enc_layers"], xe, pos_e, 0,
+                        pattern=("encoder",))
+    enc_out = rms_norm(xe, params["enc_norm"])
+
+    xd = _embed_in(cfg, params, tokens)
+    s_dec = tokens.shape[1]
+    xd = xd + _sinusoid(s_dec, cfg.d_model, xd.dtype)[None]
+    pos_d = jnp.broadcast_to(jnp.arange(s_dec), (b, s_dec))
+    xd, aux = _scan_stack(cfg, params["layers"], xd, pos_d, 0, enc_out,
+                          pattern=("decoder",))
+    return _out_head(cfg, params, xd), aux
+
+
+def loss_fn(cfg, params, batch):
+    """batch: tokens (B,S), labels (B,S) [, images | frames]."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          images=batch.get("images"),
+                          frames=batch.get("frames"))
+    labels = batch["labels"]
+    if cfg.n_image_tokens and "images" in batch:
+        logits = logits[:, batch["images"].shape[1]:]
+    loss = cross_entropy_loss(logits, labels)
+    return loss + cfg.router_aux_coef * aux, {"ce": loss, "aux": aux}
+
+
+def _scan_or_unroll(cfg, body, carry, xs):
+    """lax.scan when cfg.scan_layers, python unroll otherwise (dry-run cost
+    protocol).  ``body`` returns (carry, ys_slice)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, P.tree_slice(xs, i))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int, *, s_enc: int = 0):
+    """Abstract-compatible cache pytree (zeros)."""
+    dtype = cfg.cdtype
+    if cfg.enc_dec:
+        c = block_make_cache(cfg, "decoder", batch, max_seq, dtype)
+        c["xk"] = jnp.zeros((batch, cfg.n_kv_heads, s_enc, cfg.d_head), dtype)
+        c["xv"] = jnp.zeros((batch, cfg.n_kv_heads, s_enc, cfg.d_head), dtype)
+        return {"layers": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(),
+            c)}
+    cache: Dict = {}
+    if cfg.n_periods > 0:   # stacked even when unrolled (same cache tree)
+        per_period = {
+            f"pos{i}": block_make_cache(cfg, lt, batch, max_seq, dtype)
+            for i, lt in enumerate(cfg.layer_pattern)}
+        cache["layers"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape).copy(),
+            per_period)
+    for i, lt in enumerate(cfg.tail_layers):
+        cache[f"tail{i}"] = block_make_cache(cfg, lt, batch, max_seq, dtype)
+    return cache
+
+
+def decode_step(cfg, params, cache, token, pos):
+    """token: (B, 1) int32; pos: () int32. Returns (logits, new_cache)."""
+    x = _embed_in(cfg, params, token)
+    if cfg.enc_dec:
+        s_cache = cache["layers"]["k"].shape[3]
+        table = _sinusoid(s_cache, cfg.d_model, x.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            table, jnp.minimum(pos, s_cache - 1), 1, 0)[None]
+
+        def body(h, inp):
+            layer_p, layer_c = inp
+            h, new_c = block_decode(cfg, "decoder", layer_p, h, layer_c, pos)
+            return h, new_c
+        x, new_layers = _scan_or_unroll(cfg, body, x, (params["layers"],
+                                                       cache["layers"]))
+        new_cache = {"layers": new_layers}
+        return _out_head(cfg, params, x), new_cache
+
+    new_cache: Dict = {}
+    if "layers" in params:
+        def body(h, inp):
+            layer_p, layer_c = inp
+            new_c = {}
+            for i, lt in enumerate(cfg.layer_pattern):
+                h, new_c[f"pos{i}"] = block_decode(
+                    cfg, lt, layer_p[f"pos{i}"], h, layer_c[f"pos{i}"], pos)
+            return h, new_c
+        x, new_layers = _scan_or_unroll(cfg, body, x, (params["layers"],
+                                                       cache["layers"]))
+        new_cache["layers"] = new_layers
+    for i, lt in enumerate(cfg.tail_layers):
+        x, new_cache[f"tail{i}"] = block_decode(
+            cfg, lt, params[f"tail{i}"], x, cache[f"tail{i}"], pos)
+    return _out_head(cfg, params, x), new_cache
+
+
+def encdec_prefill(cfg, params, frames, cache):
+    """Run the encoder, build per-layer cross K/V caches (whisper serving)."""
+    b, s_enc, _ = frames.shape
+    xe = dense(frames.astype(cfg.cdtype), params["frame_proj"])
+    xe = xe + _sinusoid(s_enc, cfg.d_model, xe.dtype)[None]
+    pos_e = jnp.broadcast_to(jnp.arange(s_enc), (b, s_enc))
+    xe, _ = _scan_stack(cfg, params["enc_layers"], xe, pos_e, 0,
+                        pattern=("encoder",))
+    enc_out = rms_norm(xe, params["enc_norm"])
+
+    def build_xkv(layer_p):
+        hkv, dh = cfg.n_kv_heads, cfg.d_head
+        xk = dense(enc_out, layer_p["xattn"]["wk"]).reshape(
+            b, s_enc, hkv, dh).transpose(0, 2, 1, 3)
+        xv = dense(enc_out, layer_p["xattn"]["wv"]).reshape(
+            b, s_enc, hkv, dh).transpose(0, 2, 1, 3)
+        return xk, xv
+
+    xks, xvs = jax.vmap(build_xkv)(params["layers"])
+    new_cache = dict(cache)
+    layers = dict(cache["layers"])
+    layers["xk"], layers["xv"] = xks, xvs
+    new_cache["layers"] = layers
+    return enc_out, new_cache
+
+
+def prefill(cfg, params, tokens, cache, *, images=None):
+    """Forward + cache population. Returns (logits, cache)."""
+    x = _embed_in(cfg, params, tokens)
+    if cfg.n_image_tokens and images is not None:
+        img = dense(images.astype(cfg.cdtype), params["img_proj"])
+        x = jnp.concatenate([img, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    new_cache: Dict = {}
+    if "layers" in params:
+        def body(h, inp):
+            layer_p, layer_c = inp
+            new_c = {}
+            for i, lt in enumerate(cfg.layer_pattern):
+                h, new_c[f"pos{i}"], _ = block_prefill(
+                    cfg, lt, layer_p[f"pos{i}"], h, positions,
+                    layer_c[f"pos{i}"])
+            return h, new_c
+        x, new_layers = _scan_or_unroll(cfg, body, x, (params["layers"],
+                                                       cache["layers"]))
+        new_cache["layers"] = new_layers
+    for i, lt in enumerate(cfg.tail_layers):
+        x, new_cache[f"tail{i}"], _ = block_prefill(
+            cfg, lt, params[f"tail{i}"], x, positions, cache[f"tail{i}"])
+    return _out_head(cfg, params, x), new_cache

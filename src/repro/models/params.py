@@ -1,0 +1,129 @@
+"""Parameter metadata system: a single source of truth per parameter.
+
+Each model declares a tree of ``Meta`` (shape + logical axes + init).  From
+that one declaration we derive:
+
+  * ``init_params``     — materialized jnp arrays (deterministic per-path keys)
+  * ``abstract_params`` — ShapeDtypeStructs for .lower() dry-runs (no memory)
+  * ``param_pspecs``    — PartitionSpecs via parallel.sharding logical rules
+
+so init, dry-run and sharding can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Meta:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis names (None = never sharded)
+    init: str = "normal"                  # normal | zeros | ones
+    scale: Optional[float] = None         # None → 1/sqrt(fan_in) (last-but-one dim)
+    dtype: Any = None                     # None → model param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+MetaTree = Dict[str, Union[Meta, "MetaTree"]]
+
+
+def _is_meta(x) -> bool:
+    return isinstance(x, Meta)
+
+
+def _walk(tree: MetaTree, prefix=()):
+    for k, v in sorted(tree.items()):
+        if _is_meta(v):
+            yield prefix + (k,), v
+        else:
+            yield from _walk(v, prefix + (k,))
+
+
+def _path_key(base: jax.Array, path: Tuple[str, ...]) -> jax.Array:
+    h = int.from_bytes(
+        hashlib.blake2s("/".join(path).encode(), digest_size=4).digest(), "big")
+    return jax.random.fold_in(base, h)
+
+
+def _fan_in(meta: Meta) -> int:
+    if len(meta.shape) == 0:
+        return 1
+    if len(meta.shape) == 1:
+        return meta.shape[0]
+    return int(np.prod(meta.shape[:-1]))  # contracting dims = all but last
+
+
+def init_params(metas: MetaTree, key: jax.Array, param_dtype=jnp.float32):
+    out = {}
+    for path, meta in _walk(metas):
+        dtype = meta.dtype or param_dtype
+        if meta.init == "zeros":
+            val = jnp.zeros(meta.shape, dtype)
+        elif meta.init == "ones":
+            val = jnp.ones(meta.shape, dtype)
+        else:
+            scale = meta.scale if meta.scale is not None else _fan_in(meta) ** -0.5
+            val = (scale * jax.random.normal(
+                _path_key(key, path), meta.shape, jnp.float32)).astype(dtype)
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = val
+    return out
+
+
+def abstract_params(metas: MetaTree, param_dtype=jnp.float32):
+    out = {}
+    for path, meta in _walk(metas):
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = jax.ShapeDtypeStruct(meta.shape,
+                                              meta.dtype or param_dtype)
+    return out
+
+
+def param_pspecs(metas: MetaTree, rules: Dict[str, Optional[str]], mesh=None):
+    """Logical axes → PartitionSpec. If ``mesh`` is given, an axis is only
+    sharded when the dim divides the mesh axis size (guarded FSDP/TP)."""
+    from jax.sharding import PartitionSpec as P
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+
+    def spec_axis(logical, dim):
+        phys = rules.get(logical)
+        if phys is None:
+            return None
+        names = phys if isinstance(phys, tuple) else (phys,)
+        total = 1
+        for nm in names:
+            total *= axis_sizes.get(nm, 1)
+        if mesh is not None and dim % total != 0:
+            return None
+        return phys
+
+    out = {}
+    for path, meta in _walk(metas):
+        spec = P(*[spec_axis(ax, dim) if ax else None
+                   for ax, dim in zip(meta.axes, meta.shape)])
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = spec
+    return out
+
+
+def tree_slice(tree, idx):
+    """Select index ``idx`` along the leading (stacked/period) dimension."""
+    return jax.tree.map(lambda x: x[idx], tree)
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

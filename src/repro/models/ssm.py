@@ -1,0 +1,69 @@
+"""SSM / linear-recurrence mixers: RWKV6 (Finch) and the Hymba SSM heads.
+
+The chunked jnp implementation mirrors kernels/rwkv6_scan.py math exactly
+(same stability: only non-positive exponents) and is what pjit lowers for
+dry-runs; the Pallas kernel is the TPU hot path.
+
+Hymba's Mamba heads are adapted to the same data-dependent-decay linear
+attention form (state = ssm_state per head) — see DESIGN.md §5 note on the
+hardware adaptation of selective SSMs to our chunked recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_chunked_jnp(r, k, v, w, u, *, chunk: int = 64):
+    """Chunked WKV. r,k,w: (B,H,T,K); v: (B,H,T,V); u: (H,K). fp32 out."""
+    b, h, t, kk = r.shape
+    vv = v.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    nc = t // chunk
+
+    def to_chunks(x):
+        return x.astype(jnp.float32).reshape(b, h, nc, chunk, x.shape[-1])
+
+    r_, k_, v_, w_ = map(to_chunks, (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+
+    logw = jnp.log(w_)
+    cum = jnp.cumsum(logw, axis=3)                   # (B,H,NC,C,K) inclusive
+    ecum = cum - logw                                # exclusive
+
+    tri = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+
+    def chunk_step(state, inp):
+        rc, kc, vc, cumc, ecumc = inp                # (B,H,C,·)
+        o = jnp.einsum("bhck,bhkv->bhcv", rc * jnp.exp(ecumc), state)
+        expo = ecumc[:, :, :, None, :] - cumc[:, :, None, :, :]
+        expo = jnp.where(tri[None, None, :, :, None], expo, -jnp.inf)
+        a = jnp.einsum("bhtk,bhsk,bhtsk->bhts", rc, kc, jnp.exp(expo))
+        o = o + jnp.einsum("bhts,bhsv->bhtv", a, vc)
+        bonus = jnp.sum(rc * u32[None, :, None, :] * kc, axis=-1,
+                        keepdims=True)
+        o = o + bonus * vc
+        decay_all = jnp.exp(cumc[:, :, -1, :])       # (B,H,K)
+        kd = kc * jnp.exp(cumc[:, :, -1:, :] - cumc)
+        state = decay_all[..., None] * state + jnp.einsum(
+            "bhck,bhcv->bhkv", kd, vc)
+        return state, o
+
+    s0 = jnp.zeros((b, h, kk, vv), jnp.float32)
+    inputs = (jnp.moveaxis(r_, 2, 0), jnp.moveaxis(k_, 2, 0),
+              jnp.moveaxis(v_, 2, 0), jnp.moveaxis(cum, 2, 0),
+              jnp.moveaxis(ecum, 2, 0))
+    state, o = jax.lax.scan(chunk_step, s0, inputs)
+    o = jnp.moveaxis(o, 0, 2).reshape(b, h, t, vv)
+    return o, state
+
+
+def rwkv6_decode_step(r_t, k_t, v_t, w_t, u, state):
+    """One token. r_t,k_t,w_t: (B,H,K); v_t: (B,H,V); state: (B,H,K,V)."""
+    r32, k32, v32, w32 = (x.astype(jnp.float32) for x in (r_t, k_t, v_t, w_t))
+    kv = k32[..., :, None] * v32[..., None, :]          # (B,H,K,V)
+    o = jnp.einsum("bhk,bhkv->bhv",
+                   r32, state + u.astype(jnp.float32)[None, :, :, None] * kv)
+    state = w32[..., :, None] * state + kv
+    return o, state

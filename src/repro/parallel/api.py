@@ -1,0 +1,76 @@
+"""Trace-time sharding-constraint API usable from model code.
+
+Model code calls ``constrain(x, "dp", None, "model")`` with *logical* axis
+names; if a mesh is active (set by the step builders at trace time) this
+becomes a guarded ``with_sharding_constraint``; with no mesh (unit tests,
+single device) it is a no-op.  Guards drop any axis whose dim does not
+divide the mesh axes, so the same model code serves every arch × mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    tok = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def _resolve(mesh: Mesh, name):
+    """logical name → physical axis/axes."""
+    if name is None:
+        return None
+    if name == "dp":
+        return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    from .sharding import LOGICAL_RULES
+    if name in LOGICAL_RULES:
+        return LOGICAL_RULES[name]
+    if name in mesh.axis_names:
+        return name
+    return None
+
+
+def _manual_axes():
+    """Axes currently under manual (shard_map) control at trace time."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        return {n for n, t in zip(am.axis_names, am.axis_types)
+                if t == jax.sharding.AxisType.Manual}
+    except Exception:  # pragma: no cover - no abstract mesh
+        return set()
+
+
+def constrain(x, *names):
+    mesh = _MESH.get()
+    if mesh is None or x.ndim != len(names):
+        return x
+    from .sharding import axis_size
+    manual = _manual_axes()
+    axes = []
+    for dim, name in zip(x.shape, names):
+        phys = _resolve(mesh, name)
+        if phys is not None:
+            tup = phys if isinstance(phys, tuple) else (phys,)
+            tup = tuple(a for a in tup if a not in manual)
+            phys = tup if len(tup) > 1 else (tup[0] if tup else None)
+        if phys is not None and dim % axis_size(mesh, phys) != 0:
+            phys = None
+        axes.append(phys)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*axes)))

@@ -1,0 +1,76 @@
+"""Pipeline parallelism: GPipe-style microbatched stage execution.
+
+The production (16, 16) mesh saturates with FSDP×TP before PP pays (design
+note in DESIGN.md §6), so PP here is the *optional* third axis for deeper
+meshes (e.g. (pp=4, data=8, model=16) at 512 chips): provided, unit-tested
+at small scale, and wired into the launcher behind ``--pp``.
+
+Mechanics: stages are laid out over the ``pipe`` mesh axis via shard_map;
+microbatches flow stage→stage with ``jax.lax.ppermute`` inside a scan over
+(n_micro + n_stage − 1) ticks (fill + steady state + drain).  Reverse-mode
+differentiation of ppermute gives the backward permutes automatically, so
+the same wrapper trains.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x_micro, *, mesh,
+                   axis: str = "pipe"):
+    """Run ``n_micro`` microbatches through ``n_stage`` pipeline stages.
+
+    stage_fn(params_slice, x) → x          (one stage's computation)
+    stage_params: pytree with leading dim n_stage (stage i's slice lives on
+                  pipe-rank i)
+    x_micro:      (n_micro, micro_batch, ...) inputs
+    Returns (n_micro, micro_batch, ...) outputs (from the last stage).
+    """
+    n_stage = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    n_micro = x_micro.shape[0]
+
+    def per_stage(params_slice, xs):
+        # params_slice: this stage's params (leading dim 1) — squeeze
+        params_local = jax.tree.map(lambda p: p[0], params_slice)
+        stage = jax.lax.axis_index(axis)
+        ticks = n_micro + n_stage - 1
+        perm = [(i, (i + 1) % n_stage) for i in range(n_stage)]
+
+        def tick(carry, t):
+            buf, outs = carry           # buf: current activation holding slot
+            # stage 0 injects microbatch t (when valid)
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            injected = jax.lax.dynamic_index_in_dim(xs, mb_idx, 0,
+                                                    keepdims=False)
+            cur = jnp.where(stage == 0, injected, buf)
+            y = stage_fn(params_local, cur)
+            # last stage records its output at position (t - n_stage + 1)
+            out_idx = jnp.clip(t - n_stage + 1, 0, n_micro - 1)
+            record = (stage == n_stage - 1) & (t >= n_stage - 1)
+            outs = jax.lax.cond(
+                record,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, out_idx, 0),
+                lambda o: o, outs)
+            nxt = jax.lax.ppermute(y, axis, perm)
+            return (nxt, outs), None
+
+        buf0 = jnp.zeros_like(xs[0])
+        outs0 = jnp.zeros_like(xs)
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0),
+                                    jnp.arange(ticks))
+        return outs
+
+    in_specs = (jax.tree.map(lambda _: P(axis), stage_params),
+                P(*([None] * x_micro.ndim)))
+    # per-stage outputs stack along the pipe axis; the caller wants the
+    # last stage's slab
+    out_specs = P(axis, *([None] * (x_micro.ndim - 1)))
+    stacked = jax.shard_map(per_stage, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_vma=False)(
+        stage_params, x_micro)
+    return stacked[-n_micro:]

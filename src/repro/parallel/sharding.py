@@ -1,0 +1,135 @@
+"""Sharding: logical-axis rules → NamedShardings over (pod, data, model).
+
+Posture (DESIGN.md §6):
+  * batch        → (pod, data)          pure DP across pods, DP within pod
+  * params       → FSDP over ``data`` on the largest non-TP dim ("embed"/"mlp"
+                   row), TP over ``model`` ("heads"/"mlp"/"vocab"/"experts")
+  * KV cache seq → ``data`` for the long-context decode cells (SP)
+Every rule is divisibility-guarded: if a dim does not divide the mesh axes,
+the axis is dropped (replicated) rather than erroring — a requirement for
+supporting 10 heterogeneous architectures on one fixed mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical → physical mesh axis (None = replicate)
+LOGICAL_RULES = {
+    "vocab": "model",
+    "heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "embed": "data",        # FSDP (ZeRO-3 style; XLA inserts all-gathers)
+    "embed2": None,
+    "layers": None,         # stacked/scanned dim — never sharded
+}
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel axes tuple for this mesh (includes pod if present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, names) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    total = 1
+    for n in names:
+        total *= sizes.get(n, 1)
+    return total
+
+
+def guarded(mesh: Mesh, dim: int, names) -> Optional[object]:
+    """Return ``names`` if ``dim`` divides their product, else None."""
+    if names is None:
+        return None
+    if dim % axis_size(mesh, names) != 0:
+        return None
+    return names
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """(B, ...) activations: batch over DP axes if divisible."""
+    axes = dp_axes(mesh)
+    if batch % axis_size(mesh, axes) != 0:
+        # try within-pod data only, then give up
+        axes = ("data",)
+        if batch % axis_size(mesh, axes) != 0:
+            axes = None
+    return P(axes, *([None] * extra_dims))
+
+
+def shard_act(mesh: Mesh, x, *names):
+    """with_sharding_constraint with divisibility guards per dim."""
+    spec = P(*[guarded(mesh, d, n) for d, n in zip(x.shape, names)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def params_pspecs(cfg, mesh: Mesh):
+    from repro.models.model import lm_metas
+    from repro.models.params import param_pspecs
+    return param_pspecs(lm_metas(cfg), LOGICAL_RULES, mesh)
+
+
+def params_shardings(cfg, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        params_pspecs(cfg, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding (serving): SP over the cache sequence dim for batch-1 cells
+# ---------------------------------------------------------------------------
+
+def cache_pspec_fn(cfg, mesh: Mesh, batch: int):
+    """Returns a fn mapping each cache leaf (by example leaf) to a spec.
+
+    Leaf kinds:
+      k/v:       (L?, B, Hkv, S, D) → batch over DP if divisible, else
+                 S over data (sequence parallelism for global_batch=1)
+      slot_pos:  (S,) replicated
+      wkv/ssm:   (L?, B, H, K, V)   → batch over DP else heads over model
+      shift*:    (L?, B, d)         → batch over DP
+    """
+    dp = dp_axes(mesh)
+    batch_ok = batch % axis_size(mesh, dp) == 0
+
+    def spec_for(path: str, leaf) -> P:
+        ndim = leaf.ndim
+        stacked = ndim >= 1 and "layers" in path
+        lead = (None,) if stacked else ()
+        n = ndim - len(lead)
+        if path.endswith("slot_pos"):
+            return P(*lead, *([None] * n))
+        if path.endswith(("k", "v", "xk", "xv")) and n == 4:
+            b, hkv, s, d = leaf.shape[-4:]
+            if batch_ok:
+                return P(*lead, dp, guarded(mesh, hkv, "model"), None, None)
+            return P(*lead, None, guarded(mesh, hkv, "model"),
+                     guarded(mesh, s, "data"), None)
+        if path.endswith(("wkv", "ssm_state")) and n == 4:
+            b, h, k, v = leaf.shape[-4:]
+            if batch_ok:
+                return P(*lead, dp, guarded(mesh, h, "model"), None, None)
+            return P(*lead, None, guarded(mesh, h, "model"), None, None)
+        if n >= 1:
+            b = leaf.shape[len(lead)]
+            if batch_ok and b == batch:
+                return P(*lead, dp, *([None] * (n - 1)))
+        return P(*([None] * ndim))
+    return spec_for
+
+
+def cache_shardings(cfg, mesh: Mesh, cache_tree, batch: int):
+    spec_for = cache_pspec_fn(cfg, mesh, batch)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        specs.append(NamedSharding(mesh, spec_for(pstr, leaf)))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,99 @@
+"""Sparse Cholesky: symbolic analysis + level-scheduled numeric executor."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (cholesky, cholesky_baseline_numpy, etree,
+                        etree_levels, inspect_cholesky, random_spd_csr,
+                        plan_to_dense_l)
+from repro.core.formats import CSR
+
+
+def _spd(n, density, seed, pattern="banded"):
+    return random_spd_csr(n, density, np.random.default_rng(seed), pattern)
+
+
+class TestEtree:
+    def test_etree_known_arrowhead(self):
+        # arrowhead matrix: every column's parent is n-1
+        n = 6
+        d = np.eye(n) * 10
+        d[-1, :] = 1.0
+        d[:, -1] = 1.0
+        d[-1, -1] = 10
+        a = CSR.from_dense(d)
+        parent = etree(a.lower_triangle())
+        assert list(parent[:-1]) == [n - 1] * (n - 1)
+        assert parent[-1] == -1
+
+    def test_tridiag_is_path(self):
+        n = 8
+        d = np.eye(n) * 4 + np.eye(n, k=1) + np.eye(n, k=-1)
+        parent = etree(CSR.from_dense(d).lower_triangle())
+        assert list(parent) == list(range(1, n)) + [-1]
+        levels = etree_levels(parent)
+        assert list(levels) == list(range(n))  # a path: no parallelism
+
+    def test_diag_only_all_parallel(self):
+        a = CSR.from_dense(np.eye(10) * 3.0)
+        parent = etree(a.lower_triangle())
+        assert (parent == -1).all()
+        assert (etree_levels(parent) == 0).all()
+
+
+class TestSymbolicAndNumeric:
+    @given(st.integers(5, 80), st.floats(0.02, 0.3), st.integers(0, 8),
+           st.sampled_from(["banded", "uniform", "blocky"]))
+    @settings(max_examples=20, deadline=None)
+    def test_factorization_matches_numpy(self, n, density, seed, pattern):
+        a = _spd(n, density, seed, pattern)
+        plan, vals, _ = cholesky(a, dtype=jnp.float64)
+        l = plan_to_dense_l(plan, vals)
+        ref = np.linalg.cholesky(a.to_dense())
+        np.testing.assert_allclose(l, ref, rtol=1e-8, atol=1e-10)
+
+    def test_reconstruction_property(self):
+        a = _spd(60, 0.08, 42)
+        plan, vals, _ = cholesky(a)
+        l = plan_to_dense_l(plan, vals)
+        np.testing.assert_allclose(l @ l.T, a.to_dense(), rtol=1e-8, atol=1e-9)
+
+    def test_symbolic_pattern_covers_factor(self):
+        a = _spd(50, 0.1, 7)
+        plan = inspect_cholesky(a)
+        ref = np.linalg.cholesky(a.to_dense())
+        mask = np.zeros_like(ref, dtype=bool)
+        col_of_slot = np.repeat(np.arange(plan.n), np.diff(plan.col_ptr))
+        mask[plan.row_idx, col_of_slot] = True
+        # every numerically nonzero entry of L is inside the symbolic pattern
+        assert ((np.abs(ref) > 1e-12) <= mask).all()
+
+    def test_levels_respect_dependencies(self):
+        a = _spd(40, 0.15, 3)
+        plan = inspect_cholesky(a)
+        # every update's source column must be in a strictly earlier level
+        col_of_slot = np.repeat(np.arange(plan.n), np.diff(plan.col_ptr))
+        for ell in range(plan.n_levels):
+            for src in (plan.upd_src1[ell], plan.upd_src2[ell]):
+                src_lev = plan.levels[col_of_slot[src]]
+                assert (src_lev < ell).all()
+
+    def test_baseline_matches_executor(self):
+        a = _spd(70, 0.07, 9)
+        plan, vals, _ = cholesky(a)
+        base_vals, _ = cholesky_baseline_numpy(plan)
+        np.testing.assert_allclose(vals, base_vals, rtol=1e-9, atol=1e-11)
+
+    def test_fp32_mode(self):
+        a = _spd(30, 0.1, 11)
+        plan, vals, _ = cholesky(a, dtype=jnp.float32)
+        l = plan_to_dense_l(plan, vals)
+        np.testing.assert_allclose(l @ l.T, a.to_dense(), rtol=1e-3, atol=1e-3)
+
+    def test_stats_report_split(self):
+        a = _spd(50, 0.1, 13)
+        _, _, stats = cholesky(a)
+        assert stats["inspect_s"] > 0 and stats["execute_s"] > 0
+        assert stats["n_levels"] >= 1

@@ -1,0 +1,93 @@
+"""Unit + property tests for host-side sparse containers and RIR bundles."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BSR, COO, CSR, pack_csr, random_csr, unpack_to_csr
+from repro.core.formats import random_spd_csr
+
+
+def _rand(n, m, density, seed=0, pattern="uniform"):
+    return random_csr(n, m, density, np.random.default_rng(seed), pattern)
+
+
+class TestCSR:
+    def test_roundtrip_dense(self):
+        rng = np.random.default_rng(0)
+        a = (rng.random((13, 17)) < 0.3) * rng.standard_normal((13, 17))
+        csr = CSR.from_dense(a.astype(np.float32))
+        np.testing.assert_allclose(csr.to_dense(), a.astype(np.float32))
+
+    def test_coo_duplicates_summed(self):
+        coo = COO(2, 2, np.array([0, 0, 1]), np.array([1, 1, 0]),
+                  np.array([1.0, 2.0, 3.0], np.float32))
+        csr = CSR.from_coo(coo)
+        assert csr.nnz == 2
+        np.testing.assert_allclose(csr.to_dense(),
+                                   [[0, 3], [3, 0]])
+
+    def test_transpose(self):
+        a = _rand(40, 23, 0.1)
+        np.testing.assert_allclose(a.transpose().to_dense(), a.to_dense().T)
+
+    def test_lower_triangle(self):
+        a = _rand(20, 20, 0.3)
+        lo = a.lower_triangle().to_dense()
+        np.testing.assert_allclose(lo, np.tril(a.to_dense()))
+
+    @pytest.mark.parametrize("pattern", ["uniform", "powerlaw", "banded", "blocky"])
+    def test_generator_patterns(self, pattern):
+        a = _rand(128, 128, 0.05, pattern=pattern)
+        assert a.nnz > 0
+        assert a.to_dense().shape == (128, 128)
+
+    def test_spd_generator_is_spd(self):
+        a = random_spd_csr(40, 0.1, np.random.default_rng(3))
+        d = a.to_dense()
+        np.testing.assert_allclose(d, d.T)
+        w = np.linalg.eigvalsh(d)
+        assert w.min() > 0
+
+
+class TestBSR:
+    @pytest.mark.parametrize("block", [8, 16, 128])
+    def test_roundtrip(self, block):
+        a = _rand(100, 90, 0.05, seed=2)
+        b = BSR.from_csr(a, block)
+        assert b.n_rows % block == 0 and b.n_cols % block == 0
+        np.testing.assert_allclose(b.to_dense()[:100, :90], a.to_dense())
+
+    def test_fill_metric(self):
+        dense = CSR.from_dense(np.ones((64, 64), np.float32))
+        b = BSR.from_csr(dense, 32)
+        assert b.fill == 1.0
+
+
+class TestRIR:
+    @given(st.integers(10, 200), st.floats(0.001, 0.4), st.integers(0, 10),
+           st.sampled_from([4, 32, 128]))
+    @settings(max_examples=30, deadline=None)
+    def test_pack_unpack_roundtrip(self, n, density, seed, cap):
+        a = _rand(n, n, density, seed)
+        bundles = pack_csr(a, capacity=cap)
+        back = unpack_to_csr(bundles)
+        np.testing.assert_allclose(back.to_dense(), a.to_dense())
+        # invariants: counts bounded by capacity, nnz conserved
+        assert bundles.count.max(initial=0) <= cap
+        assert bundles.nnz == a.nnz
+
+    def test_row_splitting_matches_paper(self):
+        # a row longer than capacity must split into continuation bundles
+        a = CSR.from_dense(np.ones((1, 100), np.float32))
+        b = pack_csr(a, capacity=32)
+        assert b.n_bundles == 4
+        assert list(b.is_cont) == [False, True, True, True]
+        assert list(b.count) == [32, 32, 32, 4]
+
+    def test_padding_is_dead(self):
+        a = _rand(17, 29, 0.1, seed=5)
+        b = pack_csr(a, capacity=32)
+        slot = np.arange(b.capacity)[None, :]
+        dead = slot >= b.count[:, None]
+        assert (b.index[dead] == -1).all()
+        assert (b.value[dead] == 0).all()

@@ -1,0 +1,168 @@
+"""Property tests on model-level invariants (hypothesis + direct)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import AttnSpec, flash_attention_jnp
+from repro.kernels import ref as kref
+
+
+class TestAttentionJnp:
+    @given(st.integers(0, 3), st.sampled_from([0, 8, 16]),
+           st.sampled_from([0.0, 20.0]), st.booleans())
+    @settings(max_examples=12, deadline=None)
+    def test_matches_oracle(self, seed, window, softcap, causal):
+        if window and not causal:
+            causal = True  # windows are causal by construction
+        key = jax.random.PRNGKey(seed)
+        kq, kk, kv = jax.random.split(key, 3)
+        b, h, s, d = 1, 2, 64, 16
+        q = jax.random.normal(kq, (b, h, s, d), jnp.float32)
+        k = jax.random.normal(kk, (b, h, s, d), jnp.float32)
+        v = jax.random.normal(kv, (b, h, s, d), jnp.float32)
+        spec = AttnSpec(causal=causal, window=window, softcap=softcap)
+        out = flash_attention_jnp(q, k, v, spec, bq=16, bk=16)
+        expect = kref.flash_attention_ref(q, k, v, causal=causal,
+                                          window=window, softcap=softcap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_block_size_invariance(self):
+        key = jax.random.PRNGKey(7)
+        kq, kk, kv = jax.random.split(key, 3)
+        b, h, s, d = 2, 2, 128, 16
+        q = jax.random.normal(kq, (b, h, s, d), jnp.float32)
+        k = jax.random.normal(kk, (b, h, s, d), jnp.float32)
+        v = jax.random.normal(kv, (b, h, s, d), jnp.float32)
+        spec = AttnSpec(causal=True)
+        o1 = flash_attention_jnp(q, k, v, spec, bq=32, bk=32)
+        o2 = flash_attention_jnp(q, k, v, spec, bq=128, bk=64)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_growing_window_converges_to_causal(self):
+        key = jax.random.PRNGKey(3)
+        kq, kk, kv = jax.random.split(key, 3)
+        b, h, s, d = 1, 1, 64, 8
+        q = jax.random.normal(kq, (b, h, s, d), jnp.float32)
+        k = jax.random.normal(kk, (b, h, s, d), jnp.float32)
+        v = jax.random.normal(kv, (b, h, s, d), jnp.float32)
+        full = flash_attention_jnp(q, k, v, AttnSpec(causal=True), bq=16,
+                                   bk=16)
+        w64 = flash_attention_jnp(q, k, v, AttnSpec(causal=True, window=64),
+                                  bq=16, bk=16)
+        np.testing.assert_allclose(np.asarray(w64), np.asarray(full),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestMoeInvariants:
+    def _setup(self, t=64, d=16, e=8, k=2, seed=0):
+        from repro.models.moe import _row_dispatch, expert_capacity
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        tokens = jax.random.normal(k1, (t, d), jnp.float32)
+        router = jax.random.normal(k2, (d, e), jnp.float32) * 0.1
+        cap = expert_capacity(t, e, k, 2.0)
+        st_, sg, aux = _row_dispatch(tokens, router, n_experts=e, top_k=k,
+                                     capacity=cap)
+        return tokens, st_, sg, aux, t, e, k, cap
+
+    def test_slot_token_in_range_and_unique(self):
+        tokens, st_, sg, aux, t, e, k, cap = self._setup()
+        st_np = np.asarray(st_)
+        assert ((st_np >= 0) & (st_np <= t)).all()
+        live = st_np[st_np < t]
+        # a token may occupy at most top_k slots
+        _, counts = np.unique(live, return_counts=True)
+        assert counts.max() <= k
+
+    def test_gates_sum_to_one_when_not_dropped(self):
+        tokens, st_, sg, aux, t, e, k, cap = self._setup()
+        sums = np.zeros(t + 1)
+        np.add.at(sums, np.asarray(st_), np.asarray(sg))
+        # ample capacity (cf=2.0) ⇒ nothing dropped ⇒ every token's gates
+        # sum to 1
+        np.testing.assert_allclose(sums[:t], 1.0, atol=1e-5)
+
+    def test_aux_loss_near_one_for_uniform_router(self):
+        # balanced routing ⇒ Switch aux ≈ 1.0
+        tokens, st_, sg, aux, *_ = self._setup(t=512, seed=3)
+        assert 0.9 < float(aux) < 1.4
+
+    def test_moe_ffn_capacity_drop_accounting(self):
+        from repro.models.moe import moe_ffn
+        from repro.models.params import init_params
+        from repro.models.blocks import _ffn_metas
+        from repro.configs import get_config, reduced_config
+        cfg = reduced_config(get_config("dbrx-132b"))
+        metas = _ffn_metas(cfg)
+        p = init_params(metas, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                              jnp.float32)
+        out, aux = moe_ffn(x, p, n_experts=cfg.n_experts,
+                           top_k=cfg.moe_top_k, capacity_factor=1.25)
+        assert out.shape == x.shape
+        assert np.isfinite(np.asarray(out)).all()
+
+
+class TestRwkvChunkedJnp:
+    def test_matches_kernel_ref(self):
+        from repro.models.ssm import rwkv6_chunked_jnp
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 5)
+        b, h, t, kk, vv = 1, 2, 64, 8, 8
+        r = jax.random.normal(ks[0], (b, h, t, kk), jnp.float32)
+        k = jax.random.normal(ks[1], (b, h, t, kk), jnp.float32)
+        v = jax.random.normal(ks[2], (b, h, t, vv), jnp.float32)
+        w = jnp.clip(jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, t, kk))),
+                     1e-4, 1 - 1e-4).astype(jnp.float32)
+        u = jax.random.normal(ks[4], (h, kk), jnp.float32)
+        o, state = rwkv6_chunked_jnp(r, k, v, w, u, chunk=16)
+        expect = kref.rwkv6_ref(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(expect),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_state_continuation_equals_decode(self):
+        """Final chunked state must continue exactly like per-step decode."""
+        from repro.models.ssm import rwkv6_chunked_jnp, rwkv6_decode_step
+        key = jax.random.PRNGKey(5)
+        ks = jax.random.split(key, 5)
+        b, h, t, total, kk, vv = 1, 1, 32, 48, 4, 4
+        r = jax.random.normal(ks[0], (b, h, total, kk), jnp.float32)
+        k = jax.random.normal(ks[1], (b, h, total, kk), jnp.float32)
+        v = jax.random.normal(ks[2], (b, h, total, vv), jnp.float32)
+        w = jnp.clip(jax.nn.sigmoid(jax.random.normal(
+            ks[3], (b, h, total, kk))), 1e-4, 1 - 1e-4).astype(jnp.float32)
+        u = jax.random.normal(ks[4], (h, kk), jnp.float32)
+        o_full, _ = rwkv6_chunked_jnp(r, k, v, w, u, chunk=16)
+        _, state = rwkv6_chunked_jnp(r[:, :, :t], k[:, :, :t], v[:, :, :t],
+                                     w[:, :, :t], u, chunk=16)
+        o_step, _ = rwkv6_decode_step(r[:, :, t], k[:, :, t], v[:, :, t],
+                                      w[:, :, t], u, state)
+        np.testing.assert_allclose(np.asarray(o_step),
+                                   np.asarray(o_full[:, :, t]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestGemma2ServePath:
+    def test_prefill_decode_consistency_ring_cache(self):
+        """gemma2: ring caches + softcaps + post-norms through serving."""
+        from repro.configs import get_config, reduced_config
+        from repro.models import model as M
+        cfg = reduced_config(get_config("gemma2-2b"))
+        params = M.init_params(cfg, jax.random.PRNGKey(2))
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+        cache = M.init_cache(cfg, 2, 16)
+        logits_a, _ = M.prefill(cfg, params, toks, cache)
+        cache_b = M.init_cache(cfg, 2, 16)
+        logits_b = None
+        for i in range(8):
+            logits_b, cache_b = M.decode_step(cfg, params, cache_b,
+                                              toks[:, i:i + 1], jnp.int32(i))
+        np.testing.assert_allclose(np.asarray(logits_a[:, -1]),
+                                   np.asarray(logits_b[:, 0]),
+                                   rtol=2e-3, atol=2e-3)
