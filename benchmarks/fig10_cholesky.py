@@ -10,7 +10,7 @@ from typing import List
 
 import numpy as np
 
-from repro.core import cholesky_baseline_numpy, inspect_cholesky
+from repro.core import cholesky_baseline_numpy, cholesky_values, inspect_cholesky
 from repro.core.cholesky import cholesky_execute
 from repro.core.simulator import (REAP_32C, REAP_64C, ReapVariant,
                                   simulate_cholesky_cpu,
@@ -30,8 +30,9 @@ def run(verbose: bool = True) -> List[dict]:
         r64 = simulate_cholesky_reap(plan, REAP_64C)
 
         # measured: numpy numeric baseline vs jitted level executor
-        base_vals, t_base = cholesky_baseline_numpy(plan)
-        _, st = cholesky_execute(plan)
+        a_vals = cholesky_values(a)
+        base_vals, t_base = cholesky_baseline_numpy(plan, a_vals)
+        _, st = cholesky_execute(plan, a_vals)
         t_reap = st["execute_s"]
 
         row = dict(id=spec.chol_id, name=spec.name, scale=scale,

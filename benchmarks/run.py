@@ -13,7 +13,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig6,fig7_11,fig8,fig9,"
-                         "fig10,roofline")
+                         "fig10,roofline,plan_cache")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -39,6 +39,9 @@ def main(argv=None) -> None:
     if want("roofline"):
         from . import roofline_table
         roofline_table.summary()
+    if want("plan_cache"):
+        from . import bench_plan_cache
+        bench_plan_cache.run()
     print(f"benchmarks_total_seconds,{time.time() - t0:.1f}")
 
 

@@ -1,7 +1,10 @@
-"""End-to-end sparse SPD solve: A x = b via REAP Cholesky.
+"""End-to-end sparse SPD solves: A x = b via the REAP runtime.
 
-Host symbolic analysis (elimination tree → level schedule) + device numeric
-factorization, then forward/back substitution on the factor.
+Demonstrates the full runtime story on an iterative-solver-shaped workload:
+the first factorization pays the CPU pass (etree → symbolic → level
+schedule); subsequent same-pattern factorizations hit the plan cache and run
+only the numeric phase, with level-bundle emission overlapped against device
+execution (the paper's CPU/FPGA pipeline overlap).
 
     PYTHONPATH=src python examples/sparse_solver.py
 """
@@ -10,40 +13,53 @@ jax.config.update("jax_enable_x64", True)   # fp64 numeric phase
 
 import numpy as np
 
-from repro.core import inspect_cholesky, random_spd_csr
-from repro.core.cholesky import cholesky_execute, plan_to_dense_l
+from repro.core import CSR, random_spd_csr
+from repro.runtime import ReapRuntime
 
 rng = np.random.default_rng(7)
 n = 1200
 a = random_spd_csr(n, density=0.01, rng=rng)
-b = rng.standard_normal(n)
+runtime = ReapRuntime()
 
-# 1. CPU pass: etree + symbolic pattern + level-set schedule (RIR metadata)
-plan = inspect_cholesky(a)
-print(f"A: n={n}, nnz={a.nnz}; L: nnz={plan.nnz} "
-      f"(fill-in {plan.nnz / (a.nnz // 2 + n // 2):.2f}x), "
-      f"{plan.n_levels} dependency levels "
-      f"(max parallel width {max(len(c) for c in plan.cols_per_level)})")
 
-# 2. numeric phase on the device (jit, level-parallel)
-vals, stats = cholesky_execute(plan)
-print(f"numeric factorization: {stats['execute_s'] * 1e3:.1f}ms "
-      f"({stats['flops'] / 1e6:.1f} MFLOP)")
+def solve(a: CSR, b: np.ndarray) -> np.ndarray:
+    """Factor through the runtime, then sparse triangular solves (host)."""
+    plan, vals, stats = runtime.cholesky(a)
+    tag = "warm (plan-cache hit)" if stats["cache_hit"] else "cold"
+    print(f"  factor [{tag}]: inspect {stats['inspect_s'] * 1e3:.1f}ms, "
+          f"numeric {stats['execute_s'] * 1e3:.1f}ms "
+          f"({stats['flops'] / 1e6:.1f} MFLOP, "
+          f"{stats['n_levels']} levels, overlap={stats['overlap']})")
+    col_ptr, row_idx = plan.col_ptr, plan.row_idx
+    y = b.astype(np.float64).copy()
+    for k in range(a.n_rows):               # forward: L y = b
+        s, e = col_ptr[k], col_ptr[k + 1]
+        y[k] /= vals[s]
+        y[row_idx[s + 1:e]] -= vals[s + 1:e] * y[k]
+    x = y.copy()
+    for k in range(a.n_rows - 1, -1, -1):   # backward: L^T x = y
+        s, e = col_ptr[k], col_ptr[k + 1]
+        x[k] -= np.dot(vals[s + 1:e], x[row_idx[s + 1:e]])
+        x[k] /= vals[s]
+    return x
 
-# 3. sparse triangular solves on the CSC factor (host)
-col_ptr, row_idx = plan.col_ptr, plan.row_idx
-y = b.astype(np.float64).copy()
-for k in range(n):                      # forward: L y = b
-    s, e = col_ptr[k], col_ptr[k + 1]
-    y[k] /= vals[s]
-    y[row_idx[s + 1:e]] -= vals[s + 1:e] * y[k]
-x = y.copy()
-for k in range(n - 1, -1, -1):          # backward: L^T x = y
-    s, e = col_ptr[k], col_ptr[k + 1]
-    x[k] -= np.dot(vals[s + 1:e], x[row_idx[s + 1:e]])
-    x[k] /= vals[s]
 
-resid = np.linalg.norm(a.to_dense() @ x - b) / np.linalg.norm(b)
-print(f"relative residual ‖Ax−b‖/‖b‖ = {resid:.2e}")
-assert resid < 1e-10, "solve failed"
+# Repeated-pattern workload: same sparsity, three different value/rhs sets
+# (e.g. a time-stepping PDE re-assembling coefficients each step).
+for step in range(3):
+    if step:
+        # new values on the identical pattern: scale A's entries
+        a = CSR(a.n_rows, a.n_cols, a.indptr, a.indices,
+                a.data * (1.0 + 0.1 * step))
+    b = rng.standard_normal(n)
+    print(f"step {step}: n={n}, nnz={a.nnz}")
+    x = solve(a, b)
+    resid = np.linalg.norm(a.to_dense() @ x - b) / np.linalg.norm(b)
+    print(f"  relative residual ‖Ax−b‖/‖b‖ = {resid:.2e}")
+    assert resid < 1e-10, "solve failed"
+
+stats = runtime.cache_stats()
+assert stats["hits"] == 2, stats             # steps 1 and 2 reuse the plan
+print(f"plan cache: {stats['hits']} hits / {stats['misses']} misses — "
+      "inspection amortized ✓")
 print("solved ✓")

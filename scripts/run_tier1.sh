@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 test suite — the single command for local runs and CI.
+#
+#   scripts/run_tier1.sh                 # full suite
+#   scripts/run_tier1.sh tests/test_spgemm.py -k gather   # pass-through args
+#
+# Matches ROADMAP.md "Tier-1 verify". hypothesis is optional (see
+# tests/_hypothesis_compat.py); install test deps with
+#   pip install -r tests/requirements-test.txt
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -14,6 +14,11 @@ single jitted step over padded (bucketed) index arrays — the RIR padding
 discipline keeps compiled shapes static, exactly like bundle capacity in the
 paper.  Matching the paper, the numeric phase is all fp32/fp64 FLOPs with no
 symbolic work on the device.
+
+The per-level host work (bundle-emit: building the padded cmod/cdiv index
+arrays) is factored into ``emit_level_bundle`` so runtime.pipeline can
+prepare level ℓ+1 on a worker thread while the device executes level ℓ —
+the software analogue of the paper's CPU/FPGA overlap.
 """
 from __future__ import annotations
 
@@ -26,21 +31,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .etree import CholeskyPlan, inspect_cholesky
+from .etree import CholeskyPlan, cholesky_values, inspect_cholesky
 from .formats import CSR
+from .inspector import next_pow2
 
 
-def _bucket(n: int) -> int:
-    """Next power of two ≥ n (bounds recompilation to O(log max))."""
-    if n <= 1:
-        return 1
-    return 1 << (n - 1).bit_length()
-
-
-def _pad(arr: np.ndarray, size: int, fill: int) -> jnp.ndarray:
+def _pad(arr: np.ndarray, size: int, fill: int) -> np.ndarray:
+    # stays numpy: bundle-emit may run on a worker thread, and host→device
+    # transfer belongs to the executor step (avoids jax dispatch contention)
     out = np.full(size, fill, dtype=np.int64)
     out[:arr.shape[0]] = arr
-    return jnp.asarray(out)
+    return out
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -54,48 +55,67 @@ def _level_step(vals, src1, src2, dst, diag_idx, off_idx, off_diag):
     return vals
 
 
-def cholesky_execute(plan: CholeskyPlan, dtype=jnp.float64
-                     ) -> Tuple[np.ndarray, dict]:
-    """Run the numeric phase. Returns (L values in CSC order, stats)."""
+def emit_level_bundle(plan: CholeskyPlan, ell: int) -> tuple:
+    """Bundle-emit stage for level ``ell``: padded device index arrays.
+
+    Pure host work with no dependence on numeric values, so it can run on a
+    worker thread one level ahead of the executor.
+    """
     scratch = plan.nnz                           # dead-op slot
+    col_of_slot = plan.col_of_slot()
+    s1, s2, d = plan.upd_src1[ell], plan.upd_src2[ell], plan.upd_dst[ell]
+    cols = plan.cols_per_level[ell]
+    diag = plan.diag_pos[cols]
+    # off-diagonal slots of this level's columns + their diag slot
+    seg_starts = plan.col_ptr[cols] + 1          # skip the diagonal
+    seg_ends = plan.col_ptr[cols + 1]
+    counts = seg_ends - seg_starts
+    from .inspector import _ranges
+    off = _ranges(seg_starts, counts)
+    off_diag = plan.diag_pos[col_of_slot[off]]
+
+    bu = next_pow2(max(1, s1.shape[0]))
+    bc = next_pow2(max(1, diag.shape[0]))
+    bo = next_pow2(max(1, off.shape[0]))
+    return (_pad(s1, bu, scratch), _pad(s2, bu, scratch),
+            _pad(d, bu, scratch), _pad(diag, bc, scratch),
+            _pad(off, bo, scratch), _pad(off_diag, bo, scratch))
+
+
+def init_values(plan: CholeskyPlan, a_vals: np.ndarray, dtype=jnp.float64):
+    """Scatter A's lower-triangle values into the L value array (+scratch)."""
     vals = np.zeros(plan.nnz + 1, dtype=np.float64 if dtype == jnp.float64
                     else np.float32)
-    vals[plan.a_scatter_pos] = plan.a_vals
-    vals = jnp.asarray(vals, dtype=dtype)
+    vals[plan.a_scatter_pos] = a_vals
+    return jnp.asarray(vals, dtype=dtype)
 
-    col_of_slot = np.repeat(np.arange(plan.n), np.diff(plan.col_ptr))
+
+def cholesky_execute(plan: CholeskyPlan, a_vals: np.ndarray,
+                     dtype=jnp.float64) -> Tuple[np.ndarray, dict]:
+    """Run the numeric phase synchronously.
+
+    Returns (L values in CSC order, stats).  ``a_vals`` comes from
+    ``cholesky_values(a)`` — the plan itself is value-free.
+    """
+    vals = init_values(plan, a_vals, dtype)
     t0 = time.perf_counter()
     for ell in range(plan.n_levels):
-        s1, s2, d = plan.upd_src1[ell], plan.upd_src2[ell], plan.upd_dst[ell]
-        cols = plan.cols_per_level[ell]
-        diag = plan.diag_pos[cols]
-        # off-diagonal slots of this level's columns + their diag slot
-        seg_starts = plan.col_ptr[cols] + 1       # skip the diagonal
-        seg_ends = plan.col_ptr[cols + 1]
-        counts = seg_ends - seg_starts
-        from .inspector import _ranges
-        off = _ranges(seg_starts, counts)
-        off_diag = plan.diag_pos[col_of_slot[off]]
-
-        bu = _bucket(max(1, s1.shape[0]))
-        bc = _bucket(max(1, diag.shape[0]))
-        bo = _bucket(max(1, off.shape[0]))
-        vals = _level_step(
-            vals,
-            _pad(s1, bu, scratch), _pad(s2, bu, scratch), _pad(d, bu, scratch),
-            _pad(diag, bc, scratch),
-            _pad(off, bo, scratch), _pad(off_diag, bo, scratch))
+        bundle = emit_level_bundle(plan, ell)
+        vals = _level_step(vals, *bundle)
     vals.block_until_ready()
     exec_s = time.perf_counter() - t0
-    stats = dict(inspect_s=plan.inspect_seconds, execute_s=exec_s,
-                 n_levels=plan.n_levels, nnz_l=plan.nnz, flops=plan.flops())
+    stats = dict(execute_s=exec_s, n_levels=plan.n_levels,
+                 nnz_l=plan.nnz, flops=plan.flops())
     return np.asarray(vals[:plan.nnz]), stats
 
 
 def cholesky(a: CSR, dtype=jnp.float64):
     """Full REAP sparse Cholesky: A = L L^T. Returns (plan, L values, stats)."""
+    t0 = time.perf_counter()
     plan = inspect_cholesky(a)
-    vals, stats = cholesky_execute(plan, dtype)
+    inspect_s = time.perf_counter() - t0
+    vals, stats = cholesky_execute(plan, cholesky_values(a), dtype)
+    stats["inspect_s"] = inspect_s
     return plan, vals, stats
 
 
@@ -110,11 +130,12 @@ def plan_to_dense_l(plan: CholeskyPlan, vals: np.ndarray) -> np.ndarray:
 # CPU baseline (CHOLMOD simplicial-LL^T stand-in): same plan, numpy loops
 # ---------------------------------------------------------------------------
 
-def cholesky_baseline_numpy(plan: CholeskyPlan) -> Tuple[np.ndarray, float]:
+def cholesky_baseline_numpy(plan: CholeskyPlan, a_vals: np.ndarray
+                            ) -> Tuple[np.ndarray, float]:
     """Column-at-a-time numpy left-looking factorization (numeric only)."""
     vals = np.zeros(plan.nnz + 1, dtype=np.float64)
-    vals[plan.a_scatter_pos] = plan.a_vals
-    col_of_slot = np.repeat(np.arange(plan.n), np.diff(plan.col_ptr))
+    vals[plan.a_scatter_pos] = a_vals
+    col_of_slot = plan.col_of_slot()
     t0 = time.perf_counter()
     for ell in range(plan.n_levels):
         s1, s2, d = plan.upd_src1[ell], plan.upd_src2[ell], plan.upd_dst[ell]

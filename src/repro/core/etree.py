@@ -16,13 +16,12 @@ construction of the elimination tree" (§III-B).  Outputs:
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
 from .formats import CSR
-from .inspector import _ranges
+from .inspector import PatternFingerprint, _ranges
 
 
 def etree(a_lower: CSR) -> np.ndarray:
@@ -89,12 +88,16 @@ def etree_levels(parent: np.ndarray) -> np.ndarray:
     return level
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class CholeskyPlan:
     """Everything the numeric executor needs, fully precomputed.
 
     Value array layout: L values in CSC order, length ``nnz``; slot ``nnz``
     is a scratch slot absorbing padded (dead) operations.
+
+    The plan is pattern-pure (no values of A, no timing): the numeric
+    executor takes ``a_vals`` separately (see ``cholesky_values``), so one
+    plan amortizes over any number of same-pattern factorizations.
     """
 
     n: int
@@ -103,7 +106,7 @@ class CholeskyPlan:
     row_idx: np.ndarray           # (nnz,)
     diag_pos: np.ndarray          # (n,)   position of L(k,k)
     a_scatter_pos: np.ndarray     # (nnz_A_lower,) slot of each A entry
-    a_vals: np.ndarray            # (nnz_A_lower,) the A lower-tri values
+    a_lower_sel: np.ndarray       # (nnz_A_lower,) index into A.data per entry
     levels: np.ndarray            # (n,)   level of each column
     n_levels: int
     # per-level update triples and column lists (lists of numpy arrays)
@@ -111,16 +114,39 @@ class CholeskyPlan:
     upd_src2: List[np.ndarray]
     upd_dst: List[np.ndarray]
     cols_per_level: List[np.ndarray]
-    inspect_seconds: float
+    fingerprint: Optional[PatternFingerprint] = None
 
     def flops(self) -> int:
         mulsub = sum(2 * s.shape[0] for s in self.upd_src1)
         return mulsub + int(self.nnz) + self.n  # + div per offdiag + sqrt
 
+    def a_values(self, a: CSR) -> np.ndarray:
+        """Warm-path value pass: gather A's lower-triangle values through the
+        plan's precomputed selection (O(nnz), no re-sort — unlike the
+        plan-less ``cholesky_values``)."""
+        return a.data[self.a_lower_sel].astype(np.float64, copy=False)
 
-def inspect_cholesky(a: CSR) -> CholeskyPlan:
+    def col_of_slot(self) -> np.ndarray:
+        """Column of every L slot, memoized — pattern-pure, so computed once
+        per plan lifetime (not per factorization).  Plain attribute, not a
+        dataclass field: serialization ignores it."""
+        cached = getattr(self, "_col_of_slot", None)
+        if cached is None:
+            cached = np.repeat(np.arange(self.n), np.diff(self.col_ptr))
+            self._col_of_slot = cached
+        return cached
+
+
+def cholesky_values(a: CSR) -> np.ndarray:
+    """Per-call value pass: A's lower-triangle values in the CSR order that
+    ``plan.a_scatter_pos`` indexes (same pattern ⇒ same order)."""
+    return a.lower_triangle().data.astype(np.float64, copy=True)
+
+
+def inspect_cholesky(a: CSR,
+                     fingerprint: Optional[PatternFingerprint] = None
+                     ) -> CholeskyPlan:
     """Full host pass: etree → symbolic → level-grouped update schedule."""
-    t0 = time.perf_counter()
     n = a.n_rows
     a_low = a.lower_triangle()
     parent = etree(a_low)
@@ -140,6 +166,13 @@ def inspect_cholesky(a: CSR) -> CholeskyPlan:
     key_a = a_coo.col * np.int64(n) + a_coo.row
     a_pos = np.searchsorted(key_l, key_a)
     assert np.array_equal(key_l[a_pos], key_a), "A pattern ⊄ L pattern"
+
+    # selection of A's lower entries directly in A.data order: canonical CSR
+    # keeps lower_triangle() order-stable, so this gather replaces the
+    # per-call rebuild+sort on the warm path (plan.a_values)
+    a_lower_sel = np.nonzero(a.nnz_rows() >= a.indices)[0]
+    assert np.array_equal(a.data[a_lower_sel], a_coo.val), \
+        "CSR not canonical (cols unsorted within rows)"
 
     # --- update triples: for column j, ordered pairs (p <= q) of off-diag
     # entries; cmod target column k = row[p], target row r = row[q].
@@ -176,6 +209,6 @@ def inspect_cholesky(a: CSR) -> CholeskyPlan:
         upd_dst.append(dst[s:e][seg])
         cols_per_level.append(col_order[col_bounds[ell]:col_bounds[ell + 1]])
     return CholeskyPlan(n, nnz, col_ptr, row_idx, diag_pos, a_pos,
-                        a_coo.val.copy(), level, n_levels,
+                        a_lower_sel, level, n_levels,
                         upd_src1, upd_src2, upd_dst, cols_per_level,
-                        time.perf_counter() - t0)
+                        fingerprint)

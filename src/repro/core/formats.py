@@ -100,6 +100,12 @@ class CSR:
         return CSR.from_coo(COO(self.n_cols, self.n_rows, coo.col, coo.row, coo.val),
                             sum_duplicates=False)
 
+    def row_slice(self, r0: int, r1: int) -> "CSR":
+        """Zero-copy CSR view of rows [r0, r1) (chunked inspection)."""
+        s, e = int(self.indptr[r0]), int(self.indptr[r1])
+        return CSR(r1 - r0, self.n_cols, self.indptr[r0:r1 + 1] - s,
+                   self.indices[s:e], self.data[s:e])
+
     def row(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
         s, e = self.indptr[i], self.indptr[i + 1]
         return self.indices[s:e], self.data[s:e]
@@ -151,25 +157,11 @@ class BSR:
 
     @staticmethod
     def from_csr(a: CSR, block: int) -> "BSR":
-        nr = -(-a.n_rows // block) * block
-        nc = -(-a.n_cols // block) * block
-        coo = a.to_coo()
-        brow, bcol = coo.row // block, coo.col // block
-        key = brow * (nc // block) + bcol
-        order = np.argsort(key, kind="stable")
-        key_s = key[order]
-        uniq, starts = np.unique(key_s, return_index=True)
-        n_blocks = uniq.shape[0]
-        blocks = np.zeros((n_blocks, block, block), dtype=a.data.dtype)
-        # scatter elements into their block
-        inv = np.searchsorted(uniq, key)
-        lr, lc = coo.row % block, coo.col % block
-        np.add.at(blocks, (inv, lr, lc), coo.val)
-        ubrow, ubcol = uniq // (nc // block), uniq % (nc // block)
-        indptr = np.zeros(nr // block + 1, dtype=np.int64)
-        np.add.at(indptr, ubrow + 1, 1)
-        np.cumsum(indptr, out=indptr)
-        return BSR(nr, nc, block, indptr, ubcol.astype(np.int64), blocks)
+        pat = bsr_pattern_from_csr(a, block)
+        blocks = np.zeros((pat.n_blocks, block, block), dtype=a.data.dtype)
+        np.add.at(blocks, (pat.elem_block, pat.elem_row, pat.elem_col), a.data)
+        return BSR(pat.n_rows, pat.n_cols, block, pat.indptr, pat.indices,
+                   blocks)
 
     def to_dense(self) -> np.ndarray:
         out = np.zeros((self.n_rows, self.n_cols), dtype=self.blocks.dtype)
@@ -178,6 +170,80 @@ class BSR:
             r0, c0 = br[t] * self.block, self.indices[t] * self.block
             out[r0:r0 + self.block, c0:c0 + self.block] += self.blocks[t]
         return out
+
+
+@dataclasses.dataclass(eq=False)
+class BsrPattern:
+    """Block-sparse structure + element scatter map, with no values.
+
+    The value-free half of ``BSR``: ``BSR.from_csr`` is this pattern plus a
+    value scatter, and the inspector caches it inside pattern-pure plans.
+    ``scatter(data)`` re-materializes the dense (n_blocks, block, block)
+    tiles from a CSR value array in the source matrix's element order — the
+    O(nnz) per-call cost that remains after a plan is cached.
+    """
+
+    n_rows: int      # element rows, padded to a multiple of block
+    n_cols: int
+    src_n_rows: int  # unpadded source dims
+    src_n_cols: int
+    block: int
+    indptr: np.ndarray     # (n_block_rows + 1,)
+    indices: np.ndarray    # (n_blocks,) block-col of each block
+    elem_block: np.ndarray  # (src_nnz,) destination block of each CSR element
+    elem_row: np.ndarray    # (src_nnz,) local row within the block
+    elem_col: np.ndarray    # (src_nnz,) local col within the block
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.n_rows // self.block
+
+    @property
+    def n_block_cols(self) -> int:
+        return self.n_cols // self.block
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def src_nnz(self) -> int:
+        return int(self.elem_block.shape[0])
+
+    @property
+    def fill(self) -> float:
+        """Fraction of stored block entries that are structurally nonzero."""
+        denom = self.n_blocks * self.block * self.block
+        return self.src_nnz / denom if denom else 0.0
+
+    def block_rows(self) -> np.ndarray:
+        return np.repeat(np.arange(self.n_block_rows), np.diff(self.indptr))
+
+    def scatter(self, data: np.ndarray, dtype=np.float32) -> np.ndarray:
+        """Value pass: CSR data (element order) → dense block tiles."""
+        blocks = np.zeros((self.n_blocks, self.block, self.block), dtype=dtype)
+        blocks[self.elem_block, self.elem_row, self.elem_col] = data
+        return blocks
+
+
+def bsr_pattern_from_csr(a: CSR, block: int) -> BsrPattern:
+    """Structure-only block decomposition (no value traffic)."""
+    nr = -(-a.n_rows // block) * block
+    nc = -(-a.n_cols // block) * block
+    rows, cols = a.nnz_rows(), a.indices
+    brow, bcol = rows // block, cols // block
+    nbc = nc // block
+    key = brow * np.int64(nbc) + bcol
+    uniq = np.unique(key)
+    inv = np.searchsorted(uniq, key)
+    ubrow, ubcol = uniq // nbc, uniq % nbc
+    indptr = np.zeros(nr // block + 1, dtype=np.int64)
+    np.add.at(indptr, ubrow + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return BsrPattern(nr, nc, a.n_rows, a.n_cols, block, indptr,
+                      ubcol.astype(np.int64), inv.astype(np.int64),
+                      (rows % block).astype(np.int64),
+                      (cols % block).astype(np.int64))
 
 
 # ---------------------------------------------------------------------------

@@ -11,17 +11,38 @@ regular.  It performs every irregular task of the computation —
   * symbolic analysis  (paper: Cholesky etree pass)   → see core.etree
 
 so the device-side executor is a straight stream of FLOPs.
+
+Inspection is split into three stages (runtime.plan_cache exploits this):
+
+  1. **fingerprint** — ``fingerprint_pattern`` digests the sparsity pattern
+     (shape, nnz, indptr/indices bytes, capacity/block params) into a
+     hashable cache key.  Values are excluded on purpose.
+  2. **plan-build** — ``inspect_*`` builds a *pure* plan: only pattern-derived
+     index arrays, no numeric values, no timing.  Same pattern ⇒ bit-identical
+     plan, so plans are cacheable and serializable artifacts.
+  3. **bundle-emit** — ``plan.schedule`` (and the per-level emitters in
+     core.cholesky) turn the plan into the schedule bundles the executor
+     streams.  This is the cheap per-call stage that the overlapped runtime
+     performs on a worker thread while the device executes.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Optional
+import hashlib
+from typing import Optional, Tuple
 
 import numpy as np
 
-from .formats import BSR, CSR
+from .formats import BsrPattern, CSR, bsr_pattern_from_csr  # noqa: F401
 from .rir import ScheduleBundle
+
+
+def next_pow2(n: int) -> int:
+    """Next power of two ≥ n (shape bucketing: bounds jit recompiles to
+    O(log max) across the executors)."""
+    if n <= 1:
+        return 1
+    return 1 << (n - 1).bit_length()
 
 
 def _ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
@@ -39,10 +60,57 @@ def _ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Stage 1: pattern fingerprints (cache keys)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PatternFingerprint:
+    """Hashable identity of a sparse *pattern* + inspection parameters.
+
+    Two calls with the same fingerprint are guaranteed to build bit-identical
+    plans: the digest covers indptr/indices (not values), so same-pattern-
+    different-values workloads collide on purpose — that is the cache hit
+    REAP amortizes its one-time CPU pass over.
+    """
+
+    op: str
+    shapes: Tuple[Tuple[int, int], ...]
+    nnz: Tuple[int, ...]
+    digest: str
+    params: Tuple[Tuple[str, object], ...]
+
+
+def csr_pattern_digest(a: CSR) -> str:
+    """Digest of one matrix's sparsity pattern (shape + indptr + indices)."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64([a.n_rows, a.n_cols]).tobytes())
+    h.update(np.ascontiguousarray(a.indptr, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(a.indices, dtype=np.int64).tobytes())
+    return h.hexdigest()
+
+
+def fingerprint_pattern(op: str, mats, **params) -> PatternFingerprint:
+    """Stage-1 inspection: fingerprint the patterns of ``mats`` under ``op``.
+
+    ``params`` must include every knob that changes the built plan
+    (tile / block / capacity / chunking) — a miss on any component rebuilds.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    for m in mats:
+        h.update(csr_pattern_digest(m).encode())
+    return PatternFingerprint(
+        op=op,
+        shapes=tuple((m.n_rows, m.n_cols) for m in mats),
+        nnz=tuple(m.nnz for m in mats),
+        digest=h.hexdigest(),
+        params=tuple(sorted(params.items())))
+
+
+# ---------------------------------------------------------------------------
 # SpGEMM — element (gather/VPU) plan
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class SpGemmGatherPlan:
     """Element-level plan for C = A @ B (row-by-row Gustavson).
 
@@ -53,6 +121,9 @@ class SpGemmGatherPlan:
 
     The arrays are padded to a multiple of ``tile`` with a dummy slot
     ``c_nnz`` so the executor shape is static (RIR padding discipline).
+
+    The plan is *pure*: it depends only on the operands' sparsity patterns,
+    never their values — same pattern ⇒ bit-identical plan (cacheable).
     """
 
     n_rows: int
@@ -64,7 +135,8 @@ class SpGemmGatherPlan:
     b_idx: np.ndarray
     out_idx: np.ndarray
     n_pp: int            # live partial products (before padding)
-    inspect_seconds: float
+    tile: int = 1024
+    fingerprint: Optional[PatternFingerprint] = None
 
     @property
     def schedule(self) -> ScheduleBundle:
@@ -75,9 +147,10 @@ class SpGemmGatherPlan:
         return 2 * self.n_pp
 
 
-def inspect_spgemm_gather(a: CSR, b: CSR, tile: int = 1024) -> SpGemmGatherPlan:
-    """Host inspection for the VPU path (Algorithm 1, lines 2-16 symbolic)."""
-    t0 = time.perf_counter()
+def inspect_spgemm_gather(a: CSR, b: CSR, tile: int = 1024,
+                          fingerprint: Optional[PatternFingerprint] = None
+                          ) -> SpGemmGatherPlan:
+    """Stage-2 plan-build for the VPU path (Algorithm 1, lines 2-16 symbolic)."""
     if a.n_cols != b.n_rows:
         raise ValueError(f"shape mismatch {a.n_cols} vs {b.n_rows}")
     b_row_len = b.row_lengths
@@ -111,15 +184,14 @@ def inspect_spgemm_gather(a: CSR, b: CSR, tile: int = 1024) -> SpGemmGatherPlan:
         b_idx = np.concatenate([b_idx, np.zeros(pad, np.int64)])
         out_idx = np.concatenate([out_idx, np.full(pad, c_nnz, np.int64)])
     return SpGemmGatherPlan(a.n_rows, b.n_cols, c_nnz, c_indptr, c_indices,
-                            a_idx, b_idx, out_idx, n_pp,
-                            time.perf_counter() - t0)
+                            a_idx, b_idx, out_idx, n_pp, tile, fingerprint)
 
 
 # ---------------------------------------------------------------------------
 # SpGEMM — block (BSR/MXU) plan
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class SpGemmBlockPlan:
     """Block-level plan for C = A @ B on the MXU path.
 
@@ -129,11 +201,14 @@ class SpGemmBlockPlan:
     kernel can zero its VMEM accumulator there and write the block out on the
     last pair (``is_last``).  This ordering is the paper's pipeline schedule:
     one output tile in flight per grid lane, operands streamed.
+
+    Like the gather plan, this is pattern-pure: the operand tiles are
+    re-materialized per call via ``a_pat.scatter(a.data)``.
     """
 
     block: int
-    a_bsr: BSR
-    b_bsr: BSR
+    a_pat: BsrPattern
+    b_pat: BsrPattern
     n_out_blocks: int
     out_brow: np.ndarray
     out_bcol: np.ndarray
@@ -143,7 +218,7 @@ class SpGemmBlockPlan:
     is_first: np.ndarray
     is_last: np.ndarray
     n_pairs: int
-    inspect_seconds: float
+    fingerprint: Optional[PatternFingerprint] = None
 
     @property
     def schedule(self) -> ScheduleBundle:
@@ -159,26 +234,26 @@ class SpGemmBlockPlan:
 
     def useful_flops(self) -> int:
         """FLOPs a perfectly element-sparse executor would do (fill metric)."""
-        a_nnz = np.count_nonzero(self.a_bsr.blocks)
-        return int(2 * a_nnz * self.block)  # rough: each a-elt meets `block` b-cols
+        return int(2 * self.a_pat.src_nnz * self.block)
 
 
-def inspect_spgemm_block(a: CSR, b: CSR, block: int = 128) -> SpGemmBlockPlan:
-    """Host inspection for the MXU path: block Gustavson schedule."""
-    t0 = time.perf_counter()
-    a_bsr = BSR.from_csr(a, block)
-    b_bsr = BSR.from_csr(b, block)
+def inspect_spgemm_block(a: CSR, b: CSR, block: int = 128,
+                         fingerprint: Optional[PatternFingerprint] = None
+                         ) -> SpGemmBlockPlan:
+    """Stage-2 plan-build for the MXU path: block Gustavson schedule."""
+    a_pat = bsr_pattern_from_csr(a, block)
+    b_pat = bsr_pattern_from_csr(b, block)
     # block-level Gustavson expansion over (a-block, matching b-block-row)
-    ab_rows = a_bsr.block_rows()                    # block-row of each A block
-    k = a_bsr.indices                                # block-col == B block-row
-    b_row_len = np.diff(b_bsr.indptr)
+    ab_rows = a_pat.block_rows()                    # block-row of each A block
+    k = a_pat.indices                                # block-col == B block-row
+    b_row_len = np.diff(b_pat.indptr)
     counts = b_row_len[k]
-    a_id = np.repeat(np.arange(a_bsr.n_blocks, dtype=np.int64), counts)
-    b_id = _ranges(b_bsr.indptr[k], counts)
+    a_id = np.repeat(np.arange(a_pat.n_blocks, dtype=np.int64), counts)
+    b_id = _ranges(b_pat.indptr[k], counts)
     out_brow = np.repeat(ab_rows, counts)
-    out_bcol = b_bsr.indices[b_id]
+    out_bcol = b_pat.indices[b_id]
 
-    key = out_brow * np.int64(b_bsr.n_block_cols) + out_bcol
+    key = out_brow * np.int64(b_pat.n_block_cols) + out_bcol
     uniq, inv = np.unique(key, return_inverse=True)
     n_out = int(uniq.shape[0])
     order = np.argsort(inv, kind="stable")
@@ -194,11 +269,11 @@ def inspect_spgemm_block(a: CSR, b: CSR, block: int = 128) -> SpGemmBlockPlan:
     else:
         is_first = np.zeros(0, dtype=bool)
         is_last = np.zeros(0, dtype=bool)
-    return SpGemmBlockPlan(block, a_bsr, b_bsr, n_out,
-                           (uniq // b_bsr.n_block_cols).astype(np.int64),
-                           (uniq % b_bsr.n_block_cols).astype(np.int64),
+    return SpGemmBlockPlan(block, a_pat, b_pat, n_out,
+                           (uniq // b_pat.n_block_cols).astype(np.int64),
+                           (uniq % b_pat.n_block_cols).astype(np.int64),
                            a_id, b_id, out_id, is_first, is_last, n_pairs,
-                           time.perf_counter() - t0)
+                           fingerprint)
 
 
 def choose_spgemm_path(a: CSR, b: CSR, block: int = 128,
@@ -211,5 +286,5 @@ def choose_spgemm_path(a: CSR, b: CSR, block: int = 128,
     does 2 flops per true partial product at ~1/100 the peak rate.  Blocking
     wins when block fill > ~ (VPU rate / MXU rate) ≈ 1-2%.
     """
-    a_bsr = BSR.from_csr(a, block)
-    return "block" if a_bsr.fill >= fill_threshold else "gather"
+    a_pat = bsr_pattern_from_csr(a, block)
+    return "block" if a_pat.fill >= fill_threshold else "gather"

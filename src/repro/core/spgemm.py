@@ -9,6 +9,10 @@ Two executors mirror the DESIGN.md adaptation:
   driven by the inspector's schedule (Pallas kernel in kernels/bsr_spgemm.py,
   jnp fallback here).
 
+Plans are pattern-pure (core.inspector); executors take the numeric values
+separately, so a cached plan serves any number of same-pattern calls
+(runtime.plan_cache / runtime.api build on this).
+
 The numpy reference ``spgemm_ref_numpy`` doubles as the CPU-library baseline
 (MKL stand-in) for the paper's figures.
 """
@@ -23,9 +27,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .formats import BSR, CSR
+from .formats import CSR
 from .inspector import (SpGemmBlockPlan, SpGemmGatherPlan, choose_spgemm_path,
-                        inspect_spgemm_block, inspect_spgemm_gather)
+                        inspect_spgemm_block, inspect_spgemm_gather, next_pow2)
 
 
 # ---------------------------------------------------------------------------
@@ -77,6 +81,39 @@ def spgemm_gather_execute(plan: SpGemmGatherPlan, a_data: np.ndarray,
         jnp.asarray(plan.out_idx), c_nnz=plan.c_nnz))
 
 
+@functools.partial(jax.jit, static_argnames=("c_cap",))
+def _gather_execute_capped(a_data, b_data, a_idx, b_idx, out_idx, c_cap: int):
+    """Shape-bucketed gather executor for the chunked/overlapped runtime.
+
+    ``c_cap`` is a power-of-two ≥ the chunk's c_nnz, and the index arrays
+    are padded to power-of-two tile counts, so streaming many differently
+    sized chunks triggers only O(log) recompilations.
+    """
+    a_data = jnp.concatenate([a_data, jnp.zeros(1, a_data.dtype)])
+    b_data = jnp.concatenate([b_data, jnp.zeros(1, b_data.dtype)])
+    pp = a_data[a_idx] * b_data[b_idx]
+    return jax.ops.segment_sum(pp, out_idx, num_segments=c_cap + 1,
+                               indices_are_sorted=True)[:c_cap]
+
+
+def spgemm_gather_execute_chunk(plan: SpGemmGatherPlan, a_data: np.ndarray,
+                                b_data: np.ndarray) -> np.ndarray:
+    """Execute one chunk plan with bucketed shapes; returns (c_nnz,) values."""
+    c_cap = next_pow2(plan.c_nnz)
+    n = plan.a_idx.shape[0]
+    cap = next_pow2(max(1, n // max(1, plan.tile))) * plan.tile
+    pad = cap - n
+    a_idx = np.concatenate([plan.a_idx, np.full(pad, len(a_data), np.int64)])
+    b_idx = np.concatenate([plan.b_idx, np.full(pad, len(b_data), np.int64)])
+    # dead slots (pad + the plan's own tile padding) map to the c_cap segment
+    out_idx = np.concatenate([plan.out_idx, np.full(pad, plan.c_nnz, np.int64)])
+    out_idx = np.where(out_idx >= plan.c_nnz, c_cap, out_idx)
+    c = _gather_execute_capped(jnp.asarray(a_data), jnp.asarray(b_data),
+                               jnp.asarray(a_idx), jnp.asarray(b_idx),
+                               jnp.asarray(out_idx), c_cap=c_cap)
+    return np.asarray(c[:plan.c_nnz])
+
+
 # ---------------------------------------------------------------------------
 # Block (MXU) executor — jnp fallback; Pallas kernel lives in kernels/
 # ---------------------------------------------------------------------------
@@ -89,25 +126,30 @@ def _block_execute_jnp(a_blocks, b_blocks, a_id, b_id, out_id, n_out: int):
                                indices_are_sorted=True)
 
 
-def spgemm_block_execute(plan: SpGemmBlockPlan, use_pallas: bool = True
+def spgemm_block_execute(plan: SpGemmBlockPlan, a_data: np.ndarray,
+                         b_data: np.ndarray, use_pallas: bool = True
                          ) -> np.ndarray:
-    """Returns the dense (n_out_blocks, block, block) output tiles."""
+    """Returns the dense (n_out_blocks, block, block) output tiles.
+
+    ``a_data``/``b_data`` are the operands' CSR value arrays; the plan's
+    BsrPattern scatters them into MXU tiles (the per-call value pass).
+    """
     if plan.n_pairs == 0:
         return np.zeros((plan.n_out_blocks, plan.block, plan.block), np.float32)
+    a_blocks = plan.a_pat.scatter(a_data)
+    b_blocks = plan.b_pat.scatter(b_data)
     if use_pallas:
+        # replay the emitted schedule bundle through the Pallas kernel —
+        # the single entry point runtime.api also uses
         from repro.kernels import ops as kops
-        return np.asarray(kops.bsr_spgemm(
-            jnp.asarray(plan.a_bsr.blocks, jnp.float32),
-            jnp.asarray(plan.b_bsr.blocks, jnp.float32),
-            jnp.asarray(plan.a_id, jnp.int32),
-            jnp.asarray(plan.b_id, jnp.int32),
-            jnp.asarray(plan.out_id, jnp.int32),
-            jnp.asarray(plan.is_first, jnp.int32),
-            jnp.asarray(plan.is_last, jnp.int32),
+        return np.asarray(kops.bsr_spgemm_schedule(
+            plan.schedule,
+            jnp.asarray(a_blocks, jnp.float32),
+            jnp.asarray(b_blocks, jnp.float32),
             n_out_blocks=plan.n_out_blocks))
     return np.asarray(_block_execute_jnp(
-        jnp.asarray(plan.a_bsr.blocks, jnp.float32),
-        jnp.asarray(plan.b_bsr.blocks, jnp.float32),
+        jnp.asarray(a_blocks, jnp.float32),
+        jnp.asarray(b_blocks, jnp.float32),
         jnp.asarray(plan.a_id), jnp.asarray(plan.b_id),
         jnp.asarray(plan.out_id), n_out=plan.n_out_blocks))
 
@@ -115,7 +157,7 @@ def spgemm_block_execute(plan: SpGemmBlockPlan, use_pallas: bool = True
 def block_result_to_dense(plan: SpGemmBlockPlan, c_blocks: np.ndarray
                           ) -> np.ndarray:
     bs = plan.block
-    out = np.zeros((plan.a_bsr.n_rows, plan.b_bsr.n_cols), np.float32)
+    out = np.zeros((plan.a_pat.n_rows, plan.b_pat.n_cols), np.float32)
     for t in range(plan.n_out_blocks):
         r0, c0 = plan.out_brow[t] * bs, plan.out_bcol[t] * bs
         out[r0:r0 + bs, c0:c0 + bs] = c_blocks[t]
@@ -130,28 +172,35 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", block: int = 128,
            use_pallas: bool = True) -> Tuple[CSR, dict]:
     """C = A @ B with the REAP split. Returns (C, stats).
 
-    stats records the inspector/executor time split (paper Fig 7).
+    stats records the inspector/executor time split (paper Fig 7).  This is
+    the plain synchronous path; runtime.api.ReapRuntime adds plan caching
+    and inspector/executor overlap on top of the same stages.
     """
     if method == "auto":
         method = choose_spgemm_path(a, b, block)
     if method == "gather":
+        t0 = time.perf_counter()
         plan = inspect_spgemm_gather(a, b)
+        inspect_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         c_data = spgemm_gather_execute(plan, a.data, b.data)
         exec_s = time.perf_counter() - t0
         c = CSR(a.n_rows, b.n_cols, plan.c_indptr, plan.c_indices, c_data)
-        stats = dict(method="gather", inspect_s=plan.inspect_seconds,
+        stats = dict(method="gather", inspect_s=inspect_s,
                      execute_s=exec_s, flops=plan.flops(), n_pp=plan.n_pp)
         return c, stats
     if method == "block":
-        plan = inspect_spgemm_block(a, b, block)
         t0 = time.perf_counter()
-        c_blocks = spgemm_block_execute(plan, use_pallas=use_pallas)
+        plan = inspect_spgemm_block(a, b, block)
+        inspect_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        c_blocks = spgemm_block_execute(plan, a.data, b.data,
+                                        use_pallas=use_pallas)
         exec_s = time.perf_counter() - t0
         dense = block_result_to_dense(plan, c_blocks)
         c = CSR.from_dense(dense[:a.n_rows, :b.n_cols])
-        stats = dict(method="block", inspect_s=plan.inspect_seconds,
+        stats = dict(method="block", inspect_s=inspect_s,
                      execute_s=exec_s, flops=plan.flops(),
-                     n_pairs=plan.n_pairs, fill=plan.a_bsr.fill)
+                     n_pairs=plan.n_pairs, fill=plan.a_pat.fill)
         return c, stats
     raise ValueError(f"unknown method {method!r}")

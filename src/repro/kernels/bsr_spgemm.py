@@ -70,3 +70,22 @@ def bsr_spgemm(a_blocks, b_blocks, a_id, b_id, out_id, is_first, is_last,
             bytes_accessed=(2 * int(n_pairs) + int(n_out_blocks)) * bs * bs * 4,
             transcendentals=0),
     )(a_id, b_id, out_id, is_first, is_last, a_blocks, b_blocks)
+
+
+def bsr_spgemm_schedule(schedule, a_blocks, b_blocks, *, n_out_blocks: int,
+                        interpret: bool = True):
+    """Runtime entry point: drive the kernel from an RIR ScheduleBundle.
+
+    ``schedule`` is a plan's metadata-only bundle (``plan.schedule`` for a
+    ``SpGemmBlockPlan``) — the arrays the inspector emitted become the
+    scalar-prefetch operands directly, so a cached plan replays onto fresh
+    operand tiles with zero re-inspection.
+    """
+    return bsr_spgemm(
+        a_blocks, b_blocks,
+        jnp.asarray(schedule["a_id"], jnp.int32),
+        jnp.asarray(schedule["b_id"], jnp.int32),
+        jnp.asarray(schedule["out_id"], jnp.int32),
+        jnp.asarray(schedule["is_first"], jnp.int32),
+        jnp.asarray(schedule["is_last"], jnp.int32),
+        n_out_blocks=n_out_blocks, interpret=interpret)

@@ -10,6 +10,7 @@ import jax
 
 from . import ref  # noqa: F401  (re-exported for tests/benchmarks)
 from .bsr_spgemm import bsr_spgemm as _bsr_spgemm
+from .bsr_spgemm import bsr_spgemm_schedule as _bsr_spgemm_schedule
 from .flash_attention import attention_block_schedule  # noqa: F401
 from .flash_attention import flash_attention as _flash_attention
 from .moe_gemm import moe_gemm as _moe_gemm
@@ -27,6 +28,14 @@ def bsr_spgemm(a_blocks, b_blocks, a_id, b_id, out_id, is_first, is_last, *,
     return _bsr_spgemm(a_blocks, b_blocks, a_id, b_id, out_id, is_first,
                        is_last, n_out_blocks=n_out_blocks,
                        interpret=_interpret(interpret))
+
+
+def bsr_spgemm_schedule(schedule, a_blocks, b_blocks, *, n_out_blocks: int,
+                        interpret=None):
+    """Schedule-bundle form used by runtime.api (cached-plan replay)."""
+    return _bsr_spgemm_schedule(schedule, a_blocks, b_blocks,
+                                n_out_blocks=n_out_blocks,
+                                interpret=_interpret(interpret))
 
 
 def moe_gemm(x_bundles, w, bundle_expert, *, bk: int = 512, bf: int = 512,

@@ -1,0 +1,12 @@
+"""REAP runtime layer: plan caching, overlap pipelining, fault tolerance.
+
+``ReapRuntime`` (api.py) is the front end; plan_cache.py and pipeline.py are
+its mechanisms; elastic.py carries the fault-tolerance posture for the
+training/serving side of the repo.
+"""
+from .api import ReapRuntime, RuntimeConfig, default_runtime  # noqa: F401
+from .pipeline import (GatherChunkSet, OverlapStats,  # noqa: F401
+                       cholesky_execute_overlapped, chunk_row_bounds,
+                       run_overlapped, spgemm_gather_chunked)
+from .plan_cache import (CacheStats, PlanCache, deserialize_plan,  # noqa: F401
+                         serialize_plan)

@@ -1,0 +1,175 @@
+"""ReapRuntime: plan-cached, overlap-pipelined inspector-executor front end.
+
+This is the layer a repeated-pattern workload (iterative solver, MoE
+dispatch, the Fig-10 sweep) should call instead of ``core.spgemm.spgemm`` /
+``core.cholesky.cholesky``:
+
+  * every call fingerprints the operand *patterns* (stage 1),
+  * plan-build (stage 2) runs only on a cache miss,
+  * bundle-emit + execution (stage 3) run through runtime.pipeline with
+    host/device overlap when the schedule is chunkable.
+
+Same pattern + different values ⇒ cache hit ⇒ the inspector cost from the
+paper's Fig 7 split drops out of the steady state entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cholesky import cholesky_execute
+from repro.core.etree import CholeskyPlan, inspect_cholesky
+from repro.core.formats import CSR
+from repro.core.inspector import (choose_spgemm_path, fingerprint_pattern,
+                                  inspect_spgemm_block, inspect_spgemm_gather)
+from repro.core.spgemm import (block_result_to_dense, spgemm_block_execute,
+                               spgemm_gather_execute)
+
+from .pipeline import (GatherChunkSet, cholesky_execute_overlapped,
+                       spgemm_gather_chunked)
+from .plan_cache import PlanCache
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    """Knobs of the runtime; every field participates in plan fingerprints
+    that depend on it (tile/block/n_chunks)."""
+
+    cache_entries: int = 64
+    overlap: bool = True
+    n_chunks: int = 4
+    tile: int = 1024
+    block: int = 128
+    use_pallas: bool = True
+
+
+class ReapRuntime:
+    """Cached + overlapped REAP runtime (one instance per worker/process)."""
+
+    def __init__(self, config: Optional[RuntimeConfig] = None, **overrides):
+        cfg = config or RuntimeConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        self.config = cfg
+        self.cache = PlanCache(cfg.cache_entries)
+        # routing decisions are tiny strings; keep them out of the plan
+        # cache so they neither consume plan capacity nor skew hit stats
+        self._routes = PlanCache(capacity=max(256, 4 * cfg.cache_entries))
+
+    # -- SpGEMM ------------------------------------------------------------
+
+    def spgemm(self, a: CSR, b: CSR, method: str = "auto",
+               overlap: Optional[bool] = None) -> Tuple[CSR, dict]:
+        """C = A @ B through the plan cache, overlapped when chunkable."""
+        cfg = self.config
+        overlap = cfg.overlap if overlap is None else overlap
+        if method == "auto":
+            # the routing heuristic builds A's block structure (O(nnz log
+            # nnz)); cache the decision per pattern like any other plan
+            route_fp = fingerprint_pattern("route", (a, b), block=cfg.block)
+            method, _ = self._routes.get_or_build(
+                route_fp, lambda: choose_spgemm_path(a, b, cfg.block))
+
+        if method == "gather":
+            if cfg.n_chunks > 1:
+                return self._spgemm_gather_chunked(a, b, overlap)
+            return self._spgemm_gather_sync(a, b)
+        if method == "block":
+            return self._spgemm_block(a, b)
+        raise ValueError(f"unknown method {method!r}")
+
+    def _spgemm_gather_chunked(self, a: CSR, b: CSR, overlap: bool
+                               ) -> Tuple[CSR, dict]:
+        cfg = self.config
+        fp = fingerprint_pattern("spgemm_gather_chunked", (a, b),
+                                 tile=cfg.tile, n_chunks=cfg.n_chunks)
+        cached: Optional[GatherChunkSet] = self.cache.get(fp)
+        c, stats, chunkset = spgemm_gather_chunked(
+            a, b, n_chunks=cfg.n_chunks, tile=cfg.tile, overlap=overlap,
+            chunkset=cached)
+        if cached is None:
+            chunkset.fingerprint = fp
+            self.cache.put(fp, chunkset)
+        stats.update(cache_hit=cached is not None, fingerprint=fp.digest)
+        return c, stats
+
+    def _spgemm_gather_sync(self, a: CSR, b: CSR) -> Tuple[CSR, dict]:
+        fp = fingerprint_pattern("spgemm_gather", (a, b), tile=self.config.tile)
+        t0 = time.perf_counter()
+        plan, hit = self.cache.get_or_build(
+            fp, lambda: inspect_spgemm_gather(a, b, self.config.tile, fp))
+        inspect_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        c_data = spgemm_gather_execute(plan, a.data, b.data)
+        exec_s = time.perf_counter() - t0
+        c = CSR(a.n_rows, b.n_cols, plan.c_indptr, plan.c_indices, c_data)
+        stats = dict(method="gather", cache_hit=hit, inspect_s=inspect_s,
+                     execute_s=exec_s, overlap=False, flops=plan.flops(),
+                     n_pp=plan.n_pp, fingerprint=fp.digest)
+        return c, stats
+
+    def _spgemm_block(self, a: CSR, b: CSR) -> Tuple[CSR, dict]:
+        cfg = self.config
+        fp = fingerprint_pattern("spgemm_block", (a, b), block=cfg.block)
+        t0 = time.perf_counter()
+        plan, hit = self.cache.get_or_build(
+            fp, lambda: inspect_spgemm_block(a, b, cfg.block, fp))
+        inspect_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        c_blocks = spgemm_block_execute(plan, a.data, b.data,
+                                        use_pallas=cfg.use_pallas)
+        exec_s = time.perf_counter() - t0
+        dense = block_result_to_dense(plan, c_blocks)
+        c = CSR.from_dense(dense[:a.n_rows, :b.n_cols])
+        stats = dict(method="block", cache_hit=hit, inspect_s=inspect_s,
+                     execute_s=exec_s, overlap=False, flops=plan.flops(),
+                     n_pairs=plan.n_pairs, fill=plan.a_pat.fill,
+                     fingerprint=fp.digest)
+        return c, stats
+
+    # -- Cholesky ----------------------------------------------------------
+
+    def cholesky(self, a: CSR, dtype=jnp.float64,
+                 overlap: Optional[bool] = None
+                 ) -> Tuple[CholeskyPlan, np.ndarray, dict]:
+        """A = L Lᵀ through the plan cache; level-bundle emission overlaps
+        device execution (the etree schedule is the chunk stream)."""
+        cfg = self.config
+        overlap = cfg.overlap if overlap is None else overlap
+        fp = fingerprint_pattern("cholesky", (a,))
+        t0 = time.perf_counter()
+        plan, hit = self.cache.get_or_build(
+            fp, lambda: inspect_cholesky(a, fp))
+        inspect_s = time.perf_counter() - t0
+        a_vals = plan.a_values(a)
+        if overlap:
+            vals, stats = cholesky_execute_overlapped(plan, a_vals, dtype,
+                                                      overlap=True)
+        else:
+            vals, stats = cholesky_execute(plan, a_vals, dtype)
+            stats["overlap"] = False
+        stats.update(cache_hit=hit, inspect_s=inspect_s, fingerprint=fp.digest)
+        return plan, vals, stats
+
+    # -- Introspection -----------------------------------------------------
+
+    def cache_stats(self) -> dict:
+        s = self.cache.stats
+        return dict(entries=len(self.cache), capacity=self.cache.capacity,
+                    hits=s.hits, misses=s.misses, evictions=s.evictions,
+                    hit_rate=s.hit_rate)
+
+
+_DEFAULT: Optional[ReapRuntime] = None
+
+
+def default_runtime() -> ReapRuntime:
+    """Process-wide shared runtime (lazy)."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = ReapRuntime()
+    return _DEFAULT

@@ -1,0 +1,160 @@
+"""Plan cache: amortize REAP's one-time CPU pass across same-pattern calls.
+
+The paper's inspector cost is paid once per sparsity pattern; iterative
+solvers, MoE dispatch, and the Fig-10 Cholesky sweep then reuse the plan for
+every same-pattern-different-values operation (SMASH amortizes its
+compression/indexing setup the same way).  This module provides:
+
+  * ``PlanCache``     — thread-safe LRU keyed by ``PatternFingerprint``
+                        (shape, nnz, indptr/indices digest, capacity/block
+                        params).  A hit returns the exact plan object built
+                        on the miss, so schedule bundles are bit-identical.
+  * ``serialize_plan`` / ``deserialize_plan`` — plans ⇄ flat dict of numpy
+    arrays (npz-compatible), so warm plans survive process restarts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core.etree import CholeskyPlan
+from repro.core.inspector import (BsrPattern, PatternFingerprint,
+                                  SpGemmBlockPlan, SpGemmGatherPlan)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PlanCache:
+    """LRU cache of inspector plans keyed by pattern fingerprint.
+
+    ``capacity`` counts entries (plans for production patterns are a few
+    hundred MB at most; an entry count keeps the policy simple and
+    predictable for tests).  ``capacity <= 0`` disables caching entirely —
+    every lookup is a miss and nothing is stored.
+    """
+
+    def __init__(self, capacity: int = 64):
+        self.capacity = capacity
+        self.stats = CacheStats()
+        self._entries: "OrderedDict[PatternFingerprint, object]" = OrderedDict()
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, fp: PatternFingerprint) -> bool:
+        with self._lock:
+            return fp in self._entries
+
+    def get(self, fp: PatternFingerprint):
+        with self._lock:
+            if fp in self._entries:
+                self._entries.move_to_end(fp)
+                self.stats.hits += 1
+                return self._entries[fp]
+            self.stats.misses += 1
+            return None
+
+    def put(self, fp: PatternFingerprint, plan) -> None:
+        if self.capacity <= 0:
+            return
+        with self._lock:
+            self._entries[fp] = plan
+            self._entries.move_to_end(fp)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+
+    def get_or_build(self, fp: PatternFingerprint, builder: Callable[[], object]):
+        """Return (plan, hit).  ``builder`` runs outside the lock on a miss."""
+        plan = self.get(fp)
+        if plan is not None:
+            return plan, True
+        plan = builder()
+        self.put(fp, plan)
+        return plan, False
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+
+# ---------------------------------------------------------------------------
+# Serialization: plan dataclasses ⇄ flat {key: ndarray} dicts
+# ---------------------------------------------------------------------------
+
+_PLAN_TYPES = {"spgemm_gather": SpGemmGatherPlan,
+               "spgemm_block": SpGemmBlockPlan,
+               "cholesky": CholeskyPlan,
+               "bsr_pattern": BsrPattern}
+_TYPE_NAMES = {v: k for k, v in _PLAN_TYPES.items()}
+
+
+def _flatten(obj, prefix: str, out: Dict[str, np.ndarray]) -> None:
+    out[prefix + "__type"] = np.str_(_TYPE_NAMES[type(obj)])
+    for f in dataclasses.fields(obj):
+        v = getattr(obj, f.name)
+        key = f"{prefix}{f.name}"
+        if v is None or f.name == "fingerprint":
+            continue                      # fingerprints are rebuilt by callers
+        if isinstance(v, np.ndarray):
+            out[key] = v
+        elif isinstance(v, (int, float)):
+            out[key] = np.asarray(v)
+        elif isinstance(v, list):
+            out[key + "__len"] = np.asarray(len(v))
+            for i, item in enumerate(v):
+                out[f"{key}__{i}"] = np.asarray(item)
+        elif dataclasses.is_dataclass(v):
+            _flatten(v, key + "::", out)
+        else:
+            raise TypeError(f"unserializable field {f.name}: {type(v)}")
+
+
+def _unflatten(data: Dict[str, np.ndarray], prefix: str):
+    cls = _PLAN_TYPES[str(data[prefix + "__type"])]
+    kwargs = {}
+    for f in dataclasses.fields(cls):
+        if f.name == "fingerprint":
+            kwargs[f.name] = None
+            continue
+        key = f"{prefix}{f.name}"
+        if key in data:
+            v = data[key]
+            if v.ndim == 0:
+                v = v.item()
+            kwargs[f.name] = v
+        elif key + "__len" in data:
+            n = int(data[key + "__len"])
+            kwargs[f.name] = [np.asarray(data[f"{key}__{i}"]) for i in range(n)]
+        elif key + "::__type" in data:
+            kwargs[f.name] = _unflatten(data, key + "::")
+        else:
+            raise KeyError(f"missing serialized field {key}")
+    return cls(**kwargs)
+
+
+def serialize_plan(plan) -> Dict[str, np.ndarray]:
+    """Plan → flat dict of numpy arrays (pass to ``np.savez`` to persist)."""
+    out: Dict[str, np.ndarray] = {}
+    _flatten(plan, "", out)
+    return out
+
+
+def deserialize_plan(data: Dict[str, np.ndarray]):
+    """Inverse of ``serialize_plan`` (also accepts an ``np.load`` result)."""
+    return _unflatten(dict(data), "")

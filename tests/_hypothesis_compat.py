@@ -1,0 +1,86 @@
+"""Hypothesis shim: property tests degrade to fixed-seed parametrized cases.
+
+This container does not ship ``hypothesis``; importing it at module scope
+made four tier-1 test modules fail at *collection*.  Test modules import
+``given``/``settings``/``st`` from here instead:
+
+  * with hypothesis installed — re-exported verbatim, full property testing.
+  * without — ``st.*`` build deterministic example generators, and
+    ``@given`` becomes ``pytest.mark.parametrize`` over fixed-seed samples
+    (capped at ``_MAX_FALLBACK_EXAMPLES`` to keep the tier-1 wall time flat).
+
+The fallback keeps the property-test *shape* (same strategies, same
+signatures) so the suites run identically in both environments, just with
+less input diversity when hypothesis is absent.
+"""
+from __future__ import annotations
+
+HAVE_HYPOTHESIS = True
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect as _inspect
+
+    import numpy as _np
+    import pytest as _pytest
+
+    _MAX_FALLBACK_EXAMPLES = 8
+
+    class _Strategy:
+        """Minimal stand-in: draws deterministic samples from a seeded rng."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def sample(self, rng: _np.random.Generator):
+            return self._draw(rng)
+
+    class st:  # noqa: N801  (mirror `strategies as st` import style)
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def settings(**kwargs):
+        """Record max_examples on the function; ``given`` reads it."""
+        def deco(fn):
+            fn._compat_settings = kwargs
+            return fn
+        return deco
+
+    def given(*strategies):
+        """Expand strategies into fixed-seed parametrized cases."""
+        def deco(fn):
+            cfg = getattr(fn, "_compat_settings", {})
+            n = min(int(cfg.get("max_examples", _MAX_FALLBACK_EXAMPLES)),
+                    _MAX_FALLBACK_EXAMPLES)
+            params = [p for p in _inspect.signature(fn).parameters
+                      if p != "self"]
+            if len(params) != len(strategies):
+                raise TypeError(
+                    f"{fn.__name__}: {len(strategies)} strategies for "
+                    f"{len(params)} arguments {params}")
+            # seed from the test name so every test draws distinct cases,
+            # reproducibly across runs
+            seed = int.from_bytes(fn.__qualname__.encode(), "little") % 2**32
+            rng = _np.random.default_rng(seed)
+            cases = [tuple(s.sample(rng) for s in strategies)
+                     for _ in range(n)]
+            return _pytest.mark.parametrize(",".join(params), cases)(fn)
+        return deco

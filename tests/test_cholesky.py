@@ -1,12 +1,12 @@
 """Sparse Cholesky: symbolic analysis + level-scheduled numeric executor."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
-from repro.core import (cholesky, cholesky_baseline_numpy, etree,
-                        etree_levels, inspect_cholesky, random_spd_csr,
+from repro.core import (cholesky, cholesky_baseline_numpy, cholesky_values,
+                        etree, etree_levels, inspect_cholesky, random_spd_csr,
                         plan_to_dense_l)
 from repro.core.formats import CSR
 
@@ -83,7 +83,7 @@ class TestSymbolicAndNumeric:
     def test_baseline_matches_executor(self):
         a = _spd(70, 0.07, 9)
         plan, vals, _ = cholesky(a)
-        base_vals, _ = cholesky_baseline_numpy(plan)
+        base_vals, _ = cholesky_baseline_numpy(plan, cholesky_values(a))
         np.testing.assert_allclose(vals, base_vals, rtol=1e-9, atol=1e-11)
 
     def test_fp32_mode(self):

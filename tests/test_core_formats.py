@@ -1,7 +1,7 @@
 """Unit + property tests for host-side sparse containers and RIR bundles."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import BSR, COO, CSR, pack_csr, random_csr, unpack_to_csr
 from repro.core.formats import random_spd_csr
@@ -91,3 +91,69 @@ class TestRIR:
         dead = slot >= b.count[:, None]
         assert (b.index[dead] == -1).all()
         assert (b.value[dead] == 0).all()
+
+
+class TestRIRInvariants:
+    """Inspector-output invariants: every ElementBundles the CPU pass emits
+    must satisfy the RIR discipline the executors rely on."""
+
+    FAMILIES = [  # (n, m, density, pattern)
+        (96, 96, 0.05, "banded"),
+        (120, 80, 0.08, "uniform"),
+        (150, 150, 0.04, "powerlaw"),
+        (128, 128, 0.06, "blocky"),
+    ]
+
+    @pytest.mark.parametrize("cap", [4, 32, 128])
+    @pytest.mark.parametrize("n,m,density,pattern", FAMILIES)
+    def test_counts_bounded_and_padding_dead(self, n, m, density, pattern, cap):
+        a = _rand(n, m, density, seed=n + cap, pattern=pattern)
+        b = pack_csr(a, capacity=cap)
+        # count <= capacity, everywhere
+        assert (b.count >= 0).all()
+        assert b.count.max(initial=0) <= cap
+        # padding is exactly (-1, 0)
+        slot = np.arange(b.capacity)[None, :]
+        dead = slot >= b.count[:, None]
+        assert (b.index[dead] == -1).all()
+        assert (b.value[dead] == 0).all()
+        # live column ids are valid
+        assert (b.index[~dead] >= 0).all()
+        assert (b.index[~dead] < m).all()
+
+    @pytest.mark.parametrize("cap", [4, 32])
+    @pytest.mark.parametrize("n,m,density,pattern", FAMILIES)
+    def test_is_cont_chains_reconstruct_row_partition(self, n, m, density,
+                                                      pattern, cap):
+        """Round-trip property: chains of is_cont bundles rebuild the exact
+        CSR row partition (paper: 'CPU breaks the whole row into bundles')."""
+        a = _rand(n, m, density, seed=7 * n + cap, pattern=pattern)
+        b = pack_csr(a, capacity=cap)
+        lens = a.row_lengths
+        # chain starts are exactly the non-continuation bundles, one per
+        # nonzero row, in row order
+        starts = ~b.is_cont
+        np.testing.assert_array_equal(b.shared[starts],
+                                      np.nonzero(lens > 0)[0])
+        # within a chain every bundle shares the row id, and all but the
+        # last are full
+        if b.n_bundles:
+            same_row = b.shared[1:] == b.shared[:-1]
+            np.testing.assert_array_equal(b.is_cont[1:], same_row)
+            not_last = np.zeros(b.n_bundles, dtype=bool)
+            not_last[:-1] = same_row   # bundle i is mid-chain if i+1 continues
+            assert (b.count[not_last] == cap).all()
+        # per-row nnz conserved exactly
+        row_nnz = np.zeros(n, dtype=np.int64)
+        np.add.at(row_nnz, b.shared, b.count)
+        np.testing.assert_array_equal(row_nnz, lens)
+        # and the full round trip reproduces the matrix
+        np.testing.assert_allclose(unpack_to_csr(b).to_dense(), a.to_dense())
+
+    def test_empty_rows_produce_no_bundles(self):
+        d = np.zeros((6, 8), np.float32)
+        d[1, :3] = 1.0
+        d[4, 2:7] = 2.0
+        b = pack_csr(CSR.from_dense(d), capacity=4)
+        assert set(b.shared.tolist()) == {1, 4}
+        np.testing.assert_array_equal(b.is_cont, [False, False, True])

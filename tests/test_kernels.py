@@ -24,8 +24,8 @@ class TestBsrSpgemm:
         a = random_csr(200, 160, 0.05, rng, pattern)
         b = random_csr(160, 140, 0.05, rng, pattern)
         plan = inspect_spgemm_block(a, b, block)
-        args = (jnp.asarray(plan.a_bsr.blocks, jnp.float32),
-                jnp.asarray(plan.b_bsr.blocks, jnp.float32),
+        args = (jnp.asarray(plan.a_pat.scatter(a.data), jnp.float32),
+                jnp.asarray(plan.b_pat.scatter(b.data), jnp.float32),
                 jnp.asarray(plan.a_id, jnp.int32),
                 jnp.asarray(plan.b_id, jnp.int32),
                 jnp.asarray(plan.out_id, jnp.int32),
@@ -39,14 +39,11 @@ class TestBsrSpgemm:
         rng = np.random.default_rng(7)
         a = random_csr(100, 100, 0.1, rng, "blocky")
         plan = inspect_spgemm_block(a, a, 32)
-        out = ops.bsr_spgemm(
-            jnp.asarray(plan.a_bsr.blocks, jnp.float32),
-            jnp.asarray(plan.b_bsr.blocks, jnp.float32),
-            jnp.asarray(plan.a_id, jnp.int32),
-            jnp.asarray(plan.b_id, jnp.int32),
-            jnp.asarray(plan.out_id, jnp.int32),
-            jnp.asarray(plan.is_first, jnp.int32),
-            jnp.asarray(plan.is_last, jnp.int32),
+        # drive the kernel the way the runtime does: from the schedule bundle
+        out = ops.bsr_spgemm_schedule(
+            plan.schedule,
+            jnp.asarray(plan.a_pat.scatter(a.data), jnp.float32),
+            jnp.asarray(plan.b_pat.scatter(a.data), jnp.float32),
             n_out_blocks=plan.n_out_blocks)
         dense = block_result_to_dense(plan, np.asarray(out))
         oracle = a.to_dense().astype(np.float64) @ a.to_dense()

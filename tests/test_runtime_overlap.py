@@ -1,0 +1,158 @@
+"""Overlap correctness: chunked/double-buffered execution must match the
+synchronous reference paths exactly (to tolerance) across pattern families.
+
+Families: banded, random (uniform), power-law, block-diagonal, empty rows.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (CSR, COO, cholesky_values, inspect_cholesky,
+                        plan_to_dense_l, random_csr, random_spd_csr,
+                        spgemm_ref_numpy)
+from repro.core.cholesky import cholesky_execute
+from repro.runtime import (ReapRuntime, cholesky_execute_overlapped,
+                           chunk_row_bounds, run_overlapped,
+                           spgemm_gather_chunked)
+
+
+def _family(name: str, n: int, m: int, density: float, seed: int) -> CSR:
+    rng = np.random.default_rng(seed)
+    if name == "empty_rows":
+        a = random_csr(n, m, density, rng, "uniform")
+        coo = a.to_coo()
+        dead = rng.choice(n, size=n // 3, replace=False)   # kill 1/3 of rows
+        keep = ~np.isin(coo.row, dead)
+        return CSR.from_coo(COO(n, m, coo.row[keep], coo.col[keep],
+                                coo.val[keep]))
+    pattern = {"banded": "banded", "random": "uniform",
+               "powerlaw": "powerlaw", "blockdiag": "blocky"}[name]
+    return random_csr(n, m, density, rng, pattern)
+
+
+FAMILIES = ["banded", "random", "powerlaw", "blockdiag", "empty_rows"]
+
+
+class TestRunOverlapped:
+    def test_matches_sync_and_order(self):
+        log = []
+
+        def inspect_fn(k):
+            return k * 10
+
+        def execute_fn(k, art):
+            log.append((k, art))
+            return art + 1
+
+        res_sync, st_sync = run_overlapped(5, inspect_fn, execute_fn, False)
+        log_sync, log[:] = list(log), []
+        res_over, st_over = run_overlapped(5, inspect_fn, execute_fn, True)
+        assert res_sync == res_over == [1, 11, 21, 31, 41]
+        assert log == log_sync                 # execution order preserved
+        assert not st_sync.overlap and st_over.overlap
+
+    def test_zero_chunks(self):
+        res, st = run_overlapped(0, lambda k: k, lambda k, a: a, True)
+        assert res == [] and st.n_chunks == 0
+
+
+class TestChunkBounds:
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_bounds_cover_rows(self, family):
+        a = _family(family, 97, 83, 0.05, 3)
+        bounds = chunk_row_bounds(a, 4)
+        assert bounds[0] == 0 and bounds[-1] == a.n_rows
+        assert (np.diff(bounds) > 0).all()
+
+    def test_empty_matrix(self):
+        a = CSR.from_dense(np.zeros((5, 5), np.float32))
+        bounds = chunk_row_bounds(a, 4)
+        assert bounds[0] == 0 and bounds[-1] == 5
+
+
+class TestChunkedSpgemm:
+    @pytest.mark.parametrize("family", FAMILIES)
+    @pytest.mark.parametrize("overlap", [False, True])
+    def test_matches_reference(self, family, overlap):
+        a = _family(family, 120, 110, 0.05, 11)
+        b = _family(family, 110, 90, 0.05, 12)
+        c, stats, _ = spgemm_gather_chunked(a, b, n_chunks=4, overlap=overlap)
+        ref = spgemm_ref_numpy(a, b)
+        np.testing.assert_allclose(c.to_dense().astype(np.float64),
+                                   ref.to_dense().astype(np.float64),
+                                   rtol=1e-4, atol=1e-5)
+        assert stats["overlap"] == (overlap and stats["n_chunks"] > 1)
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_warm_chunkset_matches(self, family):
+        a = _family(family, 100, 100, 0.06, 13)
+        b = _family(family, 100, 100, 0.06, 14)
+        _, _, chunkset = spgemm_gather_chunked(a, b, n_chunks=3)
+        # same pattern, new values, warm chunk set
+        rng = np.random.default_rng(15)
+        a2 = CSR(a.n_rows, a.n_cols, a.indptr, a.indices,
+                 rng.standard_normal(a.nnz).astype(np.float32))
+        c, stats, _ = spgemm_gather_chunked(a2, b, n_chunks=3,
+                                            chunkset=chunkset)
+        np.testing.assert_allclose(c.to_dense().astype(np.float64),
+                                   spgemm_ref_numpy(a2, b).to_dense(),
+                                   rtol=1e-4, atol=1e-5)
+        assert stats["inspect_s"] < 0.05   # warm: list lookups, no plan-build
+
+    def test_single_chunk_degenerates(self):
+        a = _family("random", 60, 60, 0.08, 16)
+        c, stats, _ = spgemm_gather_chunked(a, a, n_chunks=1, overlap=True)
+        assert stats["n_chunks"] == 1 and not stats["overlap"]
+        np.testing.assert_allclose(c.to_dense().astype(np.float64),
+                                   spgemm_ref_numpy(a, a).to_dense(),
+                                   rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_runtime_end_to_end(self, family):
+        rt = ReapRuntime(n_chunks=4, use_pallas=False)
+        a = _family(family, 90, 90, 0.06, 17)
+        c, stats = rt.spgemm(a, a, method="gather")
+        np.testing.assert_allclose(c.to_dense().astype(np.float64),
+                                   spgemm_ref_numpy(a, a).to_dense(),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def _spd_family(name: str, n: int, seed: int) -> CSR:
+    rng = np.random.default_rng(seed)
+    if name == "empty_rows":
+        # structurally minimal rows: diagonal + one sub-block of couplings
+        d = np.diag(rng.uniform(2.0, 3.0, n))
+        k = n // 4
+        blk = rng.standard_normal((k, k)) * 0.1
+        d[:k, :k] += blk @ blk.T
+        return CSR.from_dense(d)
+    pattern = {"banded": "banded", "random": "uniform",
+               "powerlaw": "powerlaw", "blockdiag": "blocky"}[name]
+    return random_spd_csr(n, 0.06, rng, pattern)
+
+
+class TestOverlappedCholesky:
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_matches_sync_and_numpy(self, family):
+        a = _spd_family(family, 70, 21)
+        plan = inspect_cholesky(a)
+        a_vals = cholesky_values(a)
+        sync_vals, _ = cholesky_execute(plan, a_vals, jnp.float64)
+        over_vals, stats = cholesky_execute_overlapped(plan, a_vals,
+                                                       jnp.float64)
+        np.testing.assert_allclose(over_vals, sync_vals, rtol=1e-12,
+                                   atol=1e-13)
+        l = plan_to_dense_l(plan, over_vals)
+        np.testing.assert_allclose(l, np.linalg.cholesky(a.to_dense()),
+                                   rtol=1e-8, atol=1e-10)
+        assert stats["n_levels"] == plan.n_levels
+
+    @pytest.mark.parametrize("family", ["banded", "blockdiag"])
+    def test_runtime_cholesky_overlap(self, family):
+        rt = ReapRuntime(use_pallas=False)
+        a = _spd_family(family, 60, 23)
+        plan, vals, stats = rt.cholesky(a, overlap=True)
+        l = plan_to_dense_l(plan, vals)
+        np.testing.assert_allclose(l @ l.T, a.to_dense(), rtol=1e-8,
+                                   atol=1e-9)

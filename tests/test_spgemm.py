@@ -1,7 +1,7 @@
 """SpGEMM inspector-executor: correctness vs dense oracle, both paths."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (CSR, choose_spgemm_path, inspect_spgemm_block,
                         inspect_spgemm_gather, random_csr, spgemm,
@@ -57,7 +57,7 @@ class TestBlockPath:
         a = _rand(100, 80, 0.08, 7, pattern)
         b = _rand(80, 60, 0.08, 8, pattern)
         plan = inspect_spgemm_block(a, b, block)
-        c_blocks = spgemm_block_execute(plan, use_pallas=False)
+        c_blocks = spgemm_block_execute(plan, a.data, b.data, use_pallas=False)
         dense = block_result_to_dense(plan, np.asarray(c_blocks))
         np.testing.assert_allclose(dense[:100, :60], _dense_oracle(a, b),
                                    rtol=1e-4, atol=1e-4)
