@@ -43,3 +43,21 @@ print("Pallas kernel == jnp oracle ✓")
 # 3. un-bundle back to token order with gate mixing
 out = unbundle(jnp.asarray(y_ref), combine, D)
 print(f"output: {out.shape}; finite: {bool(jnp.isfinite(out).all())} ✓")
+
+# 4. repeated routings hit the plan cache: the assignment *pattern* is
+#    fingerprinted under the moe_dispatch op tag, so a sticky router (decode
+#    steps, replayed traces) pays the bundling plan once
+from repro.models.moe import host_route
+from repro.runtime import ReapRuntime
+
+rt = ReapRuntime()
+expert_ids, gates = host_route(tokens, router_w, top_k=K)
+xb, plan, st_cold = rt.moe_dispatch(np.asarray(tokens), expert_ids,
+                                    n_experts=E, capacity=cap)
+xb2, plan2, st_warm = rt.moe_dispatch(np.asarray(tokens) * 0.5, expert_ids,
+                                      n_experts=E, capacity=cap)
+y_warm = ops.moe_gemm_schedule(plan.schedule, jnp.asarray(xb2, jnp.float32),
+                               w_expert, bk=128, bf=128)
+mixed = plan.combine(np.asarray(y_warm), gates)
+print(f"plan cache: cold hit={st_cold['cache_hit']}, "
+      f"warm hit={st_warm['cache_hit']}; combined output {mixed.shape} ✓")

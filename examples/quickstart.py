@@ -30,3 +30,16 @@ blocky = random_csr(1024, 1024, density=0.02, rng=rng, pattern="blocky")
 c2, stats2 = spgemm(blocky, blocky, method="block", block=32)
 print(f"block path: {stats2['n_pairs']} tile-pair jobs, "
       f"fill={stats2['fill']:.2%} (Pallas kernel, interpret mode on CPU)")
+
+# 5. repeated-pattern workloads go through the runtime: the plan cache pays
+#    the inspector once per pattern, then spgemm(plan=...) replays it
+from repro.core import CSR
+from repro.runtime import ReapRuntime
+
+rt = ReapRuntime(n_chunks=1, overlap=False)
+rt.spgemm(a, a)                                # miss: builds + caches plan
+a2 = CSR(a.n_rows, a.n_cols, a.indptr, a.indices,
+         rng.standard_normal(a.nnz).astype(a.data.dtype))
+c3, stats3 = rt.spgemm(a2, a2)                 # same pattern, fresh values
+print(f"warm plan cache: hit={stats3['cache_hit']}, "
+      f"inspect={stats3['inspect_s'] * 1e3:.2f}ms (amortized away)")

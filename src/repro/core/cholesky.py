@@ -109,12 +109,23 @@ def cholesky_execute(plan: CholeskyPlan, a_vals: np.ndarray,
     return np.asarray(vals[:plan.nnz]), stats
 
 
-def cholesky(a: CSR, dtype=jnp.float64):
-    """Full REAP sparse Cholesky: A = L L^T. Returns (plan, L values, stats)."""
-    t0 = time.perf_counter()
-    plan = inspect_cholesky(a)
-    inspect_s = time.perf_counter() - t0
-    vals, stats = cholesky_execute(plan, cholesky_values(a), dtype)
+def cholesky(a: CSR, dtype=jnp.float64, plan: CholeskyPlan = None):
+    """Full REAP sparse Cholesky: A = L L^T. Returns (plan, L values, stats).
+
+    With a pre-built ``plan`` (same pattern as ``a``, e.g. from the runtime
+    plan cache) inspection is skipped and the value pass uses the plan's
+    precomputed lower-triangle selection — the warm planned-execution path
+    ``runtime.ReapRuntime`` routes through.
+    """
+    inspect_s = 0.0
+    if plan is None:
+        t0 = time.perf_counter()
+        plan = inspect_cholesky(a)
+        inspect_s = time.perf_counter() - t0
+        a_vals = cholesky_values(a)
+    else:
+        a_vals = plan.a_values(a)
+    vals, stats = cholesky_execute(plan, a_vals, dtype)
     stats["inspect_s"] = inspect_s
     return plan, vals, stats
 

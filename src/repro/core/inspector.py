@@ -89,15 +89,23 @@ def csr_pattern_digest(a: CSR) -> str:
     return h.hexdigest()
 
 
-def fingerprint_pattern(op: str, mats, **params) -> PatternFingerprint:
+def fingerprint_pattern(op: str, mats, digests: Optional[Tuple[str, ...]] = None,
+                        **params) -> PatternFingerprint:
     """Stage-1 inspection: fingerprint the patterns of ``mats`` under ``op``.
 
     ``params`` must include every knob that changes the built plan
     (tile / block / capacity / chunking) — a miss on any component rebuilds.
+
+    ``digests`` optionally supplies precomputed ``csr_pattern_digest`` values
+    (one per matrix, same order) so callers that key several fingerprints off
+    the same operands — e.g. a routing decision plus a plan key in
+    ``method="auto"`` — hash each pattern exactly once.
     """
+    if digests is None:
+        digests = tuple(csr_pattern_digest(m) for m in mats)
     h = hashlib.blake2b(digest_size=16)
-    for m in mats:
-        h.update(csr_pattern_digest(m).encode())
+    for d in digests:
+        h.update(d.encode())
     return PatternFingerprint(
         op=op,
         shapes=tuple((m.n_rows, m.n_cols) for m in mats),
@@ -236,6 +244,29 @@ class SpGemmBlockPlan:
         """FLOPs a perfectly element-sparse executor would do (fill metric)."""
         return int(2 * self.a_pat.src_nnz * self.block)
 
+    def out_entry_order(self):
+        """Row-major global ordering of every stored output-tile entry.
+
+        Returns ``(perm, rows, cols)``: ``c_blocks.reshape(-1)[perm]`` lists
+        the output entries in CSR (row, col) order with global coordinates
+        ``rows``/``cols``.  Pattern-pure, so the sort is paid once per plan
+        lifetime and the per-call CSR extraction is a gather + mask (see
+        ``spgemm.block_result_to_csr``).  Memoized as a plain attribute —
+        not a dataclass field, so serialization skips it.
+        """
+        cached = getattr(self, "_entry_order", None)
+        if cached is None:
+            bs = self.block
+            t = np.repeat(np.arange(self.n_out_blocks), bs * bs)
+            rr = np.tile(np.repeat(np.arange(bs), bs), self.n_out_blocks)
+            cc = np.tile(np.arange(bs), self.n_out_blocks * bs)
+            rows = self.out_brow[t] * bs + rr
+            cols = self.out_bcol[t] * bs + cc
+            perm = np.lexsort((cols, rows))
+            cached = (perm, rows[perm], cols[perm])
+            self._entry_order = cached
+        return cached
+
 
 def inspect_spgemm_block(a: CSR, b: CSR, block: int = 128,
                          fingerprint: Optional[PatternFingerprint] = None
@@ -274,6 +305,123 @@ def inspect_spgemm_block(a: CSR, b: CSR, block: int = 128,
                            (uniq % b_pat.n_block_cols).astype(np.int64),
                            a_id, b_id, out_id, is_first, is_last, n_pairs,
                            fingerprint)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch — expert-routing plan (same machinery, distinct op tag)
+# ---------------------------------------------------------------------------
+
+def routing_csr(expert_ids: np.ndarray, n_experts: int) -> CSR:
+    """Token→expert assignment as a CSR pattern for the fingerprint machinery.
+
+    ``expert_ids`` is the (n_tokens, top_k) router output.  The CSR keeps the
+    per-token top-k *order* (indices are not column-sorted): two routings
+    that pick the same expert sets in a different k-order bundle differently,
+    so they must not collide in the plan cache.
+    """
+    t, k = expert_ids.shape
+    ids = np.ascontiguousarray(expert_ids.reshape(-1), dtype=np.int64)
+    if ids.size and (ids.min() < 0 or ids.max() >= n_experts):
+        # negative ids would wrap into another expert's slots downstream;
+        # masked assignments must be handled by the router, not smuggled in
+        raise ValueError(f"expert ids must be in [0, {n_experts}); got "
+                         f"range [{ids.min()}, {ids.max()}]")
+    return CSR(t, n_experts,
+               np.arange(0, t * k + 1, k, dtype=np.int64),
+               ids, np.ones(t * k, dtype=np.float32))
+
+
+@dataclasses.dataclass(eq=False)
+class MoeDispatchPlan:
+    """Capacity-bundled dispatch plan for one expert-routing pattern.
+
+    The irregular half of MoE dispatch — which token lands in which bundle
+    slot, which assignments overflow — depends only on the (token, expert)
+    assignment pattern, never on gate values or activations.  The plan fixes:
+
+      * ``dest[i]``       — bundle slot of flat assignment i (row-major over
+                            the (n_tokens, top_k) routing); ``n_slots`` marks
+                            a dropped (overflow) assignment.
+      * ``slot_token[s]`` — token filling bundle slot s (``n_tokens`` = dead
+                            padding slot, the RIR discipline).
+
+    Executing a warm plan is two gathers: ``bundle`` packs tokens into
+    (n_experts, capacity, d) RIR bundles for the grouped expert GEMM
+    (kernels.moe_gemm), ``combine`` gate-mixes expert outputs back to token
+    order.  Gates are *values* and are passed at combine time.
+    """
+
+    n_tokens: int
+    n_experts: int
+    top_k: int
+    capacity: int
+    dest: np.ndarray          # (n_tokens * top_k,)
+    slot_token: np.ndarray    # (n_experts * capacity,)
+    fingerprint: Optional[PatternFingerprint] = None
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_experts * self.capacity
+
+    @property
+    def keep(self) -> np.ndarray:
+        return self.dest < self.n_slots
+
+    @property
+    def dropped_frac(self) -> float:
+        """Fraction of assignments lost to capacity overflow (pattern-pure)."""
+        return 1.0 - float(self.keep.mean()) if self.dest.size else 0.0
+
+    @property
+    def schedule(self) -> ScheduleBundle:
+        return ScheduleBundle("moe_dispatch", {
+            "slot_token": self.slot_token.astype(np.int32),
+            "bundle_expert": np.arange(self.n_experts, dtype=np.int32)})
+
+    def bundle(self, tokens: np.ndarray) -> np.ndarray:
+        """Value pass: (n_tokens, d) → (n_experts, capacity, d) bundles."""
+        d = tokens.shape[-1]
+        pad = np.concatenate([tokens, np.zeros((1, d), tokens.dtype)])
+        return pad[self.slot_token].reshape(self.n_experts, self.capacity, d)
+
+    def combine(self, y_bundles: np.ndarray, gates: np.ndarray) -> np.ndarray:
+        """Un-bundle expert outputs to token order, mixing with gates.
+
+        ``y_bundles``: (n_experts, capacity, d_out); ``gates``: the
+        (n_tokens, top_k) router weights for *this* call's values.
+        """
+        d_out = y_bundles.shape[-1]
+        flat = y_bundles.reshape(self.n_slots, d_out)
+        flat = np.concatenate([flat, np.zeros((1, d_out), flat.dtype)])
+        y_rep = flat[self.dest] * (gates.reshape(-1) * self.keep)[:, None]
+        return y_rep.reshape(self.n_tokens, self.top_k, d_out).sum(axis=1)
+
+
+def inspect_moe_dispatch(routing: CSR, capacity: int,
+                         fingerprint: Optional[PatternFingerprint] = None
+                         ) -> MoeDispatchPlan:
+    """Stage-2 plan-build for MoE dispatch (host replica of the router's
+    bundling in models.moe, minus everything value-dependent).
+
+    ``routing`` comes from ``routing_csr``; assignments beyond ``capacity``
+    per expert are dropped in stable flat order, matching the jax path.
+    """
+    t, n_experts = routing.n_rows, routing.n_cols
+    top_k = int(routing.nnz // max(1, t))
+    e_flat = routing.indices
+    order = np.argsort(e_flat, kind="stable")
+    sorted_e = e_flat[order]
+    first = np.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = np.arange(t * top_k, dtype=np.int64) - first
+    pos = np.empty_like(pos_sorted)
+    pos[order] = pos_sorted
+    keep = pos < capacity
+    n_slots = n_experts * capacity
+    dest = np.where(keep, e_flat * capacity + pos, n_slots).astype(np.int64)
+    slot_token = np.full(n_slots + 1, t, dtype=np.int64)
+    slot_token[dest] = np.repeat(np.arange(t, dtype=np.int64), top_k)
+    return MoeDispatchPlan(t, n_experts, top_k, capacity, dest,
+                           slot_token[:n_slots], fingerprint)
 
 
 def choose_spgemm_path(a: CSR, b: CSR, block: int = 128,

@@ -164,24 +164,58 @@ def block_result_to_dense(plan: SpGemmBlockPlan, c_blocks: np.ndarray
     return out
 
 
+def block_result_to_csr(plan: SpGemmBlockPlan, c_blocks: np.ndarray,
+                        n_rows: int, n_cols: int) -> CSR:
+    """Output tiles → CSR, without materializing the dense matrix.
+
+    Equivalent to ``CSR.from_dense(block_result_to_dense(...))`` (exact
+    zeros dropped, entries row-major) but the extraction cost scales with
+    the stored *block* pattern, not n² — and the ordering permutation is
+    pattern-pure (``plan.out_entry_order``), so the per-call tail of the
+    planned block path is a gather + mask + bincount, no sort.
+    """
+    perm, rows, cols = plan.out_entry_order()
+    flat = c_blocks.reshape(-1)[perm]
+    keep = (flat != 0) & (rows < n_rows) & (cols < n_cols)
+    r, vals = rows[keep], flat[keep]
+    indptr = np.zeros(n_rows + 1, dtype=np.int64)
+    indptr[1:] = np.cumsum(np.bincount(r, minlength=n_rows))
+    return CSR(n_rows, n_cols, indptr, cols[keep], vals)
+
+
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
 
 def spgemm(a: CSR, b: CSR, method: str = "auto", block: int = 128,
-           use_pallas: bool = True) -> Tuple[CSR, dict]:
+           use_pallas: bool = True, tile: int = 1024,
+           plan=None) -> Tuple[CSR, dict]:
     """C = A @ B with the REAP split. Returns (C, stats).
 
     stats records the inspector/executor time split (paper Fig 7).  This is
     the plain synchronous path; runtime.api.ReapRuntime adds plan caching
     and inspector/executor overlap on top of the same stages.
+
+    ``plan`` accepts a pre-built ``SpGemmGatherPlan`` or ``SpGemmBlockPlan``
+    (e.g. from ``runtime.PlanCache``): inspection is skipped, the executor
+    path is chosen by the plan's type, and ``method``/``block``/``tile`` are
+    ignored — the plan already fixed them.  This is the single planned-
+    execution entry point every layer (runtime, benchmarks, examples) shares.
     """
-    if method == "auto":
-        method = choose_spgemm_path(a, b, block)
-    if method == "gather":
+    inspect_s = 0.0
+    if plan is None:
+        if method == "auto":
+            method = choose_spgemm_path(a, b, block)
         t0 = time.perf_counter()
-        plan = inspect_spgemm_gather(a, b)
+        if method == "gather":
+            plan = inspect_spgemm_gather(a, b, tile)
+        elif method == "block":
+            plan = inspect_spgemm_block(a, b, block)
+        else:
+            raise ValueError(f"unknown method {method!r}")
         inspect_s = time.perf_counter() - t0
+
+    if isinstance(plan, SpGemmGatherPlan):
         t0 = time.perf_counter()
         c_data = spgemm_gather_execute(plan, a.data, b.data)
         exec_s = time.perf_counter() - t0
@@ -189,18 +223,14 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", block: int = 128,
         stats = dict(method="gather", inspect_s=inspect_s,
                      execute_s=exec_s, flops=plan.flops(), n_pp=plan.n_pp)
         return c, stats
-    if method == "block":
-        t0 = time.perf_counter()
-        plan = inspect_spgemm_block(a, b, block)
-        inspect_s = time.perf_counter() - t0
+    if isinstance(plan, SpGemmBlockPlan):
         t0 = time.perf_counter()
         c_blocks = spgemm_block_execute(plan, a.data, b.data,
                                         use_pallas=use_pallas)
         exec_s = time.perf_counter() - t0
-        dense = block_result_to_dense(plan, c_blocks)
-        c = CSR.from_dense(dense[:a.n_rows, :b.n_cols])
+        c = block_result_to_csr(plan, c_blocks, a.n_rows, b.n_cols)
         stats = dict(method="block", inspect_s=inspect_s,
                      execute_s=exec_s, flops=plan.flops(),
                      n_pairs=plan.n_pairs, fill=plan.a_pat.fill)
         return c, stats
-    raise ValueError(f"unknown method {method!r}")
+    raise TypeError(f"unsupported plan type {type(plan).__name__}")

@@ -73,3 +73,17 @@ def moe_gemm(x_bundles, w, bundle_expert, *, bk: int = 512, bf: int = 512,
             + int(nb) * d_in * d_out * 2,
             transcendentals=0),
     )(bundle_expert, x_bundles, w)
+
+
+def moe_gemm_schedule(schedule, x_bundles, w, *, bk: int = 512, bf: int = 512,
+                      interpret: bool = True):
+    """Runtime entry point: drive the kernel from a ``MoeDispatchPlan``'s RIR
+    ScheduleBundle (mirrors ``bsr_spgemm_schedule``).
+
+    The plan's ``bundle_expert`` metadata becomes the scalar-prefetch operand
+    directly, so a cached dispatch plan replays onto fresh token bundles with
+    zero re-routing.
+    """
+    return moe_gemm(x_bundles, w,
+                    jnp.asarray(schedule["bundle_expert"], jnp.int32),
+                    bk=bk, bf=bf, interpret=interpret)

@@ -14,6 +14,7 @@ from .bsr_spgemm import bsr_spgemm_schedule as _bsr_spgemm_schedule
 from .flash_attention import attention_block_schedule  # noqa: F401
 from .flash_attention import flash_attention as _flash_attention
 from .moe_gemm import moe_gemm as _moe_gemm
+from .moe_gemm import moe_gemm_schedule as _moe_gemm_schedule
 from .rwkv6_scan import rwkv6 as _rwkv6
 
 
@@ -42,6 +43,13 @@ def moe_gemm(x_bundles, w, bundle_expert, *, bk: int = 512, bf: int = 512,
              interpret=None):
     return _moe_gemm(x_bundles, w, bundle_expert, bk=bk, bf=bf,
                      interpret=_interpret(interpret))
+
+
+def moe_gemm_schedule(schedule, x_bundles, w, *, bk: int = 512, bf: int = 512,
+                      interpret=None):
+    """Schedule-bundle form used by runtime callers (cached-plan replay)."""
+    return _moe_gemm_schedule(schedule, x_bundles, w, bk=bk, bf=bf,
+                              interpret=_interpret(interpret))
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

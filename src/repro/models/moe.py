@@ -15,10 +15,34 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from .layers import dense
+
+
+def host_route(tokens, router_w, *, top_k: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side router: tokens → (expert_ids, gates) as numpy arrays.
+
+    The irregular half of MoE dispatch, separated from bundling so the
+    assignment *pattern* can be fingerprinted and plan-cached: feed
+    ``expert_ids`` to ``runtime.ReapRuntime.moe_dispatch`` (op tag
+    ``moe_dispatch``) and repeated routings hit a warm ``MoeDispatchPlan``;
+    ``gates`` are values and go to ``plan.combine`` after the expert GEMM.
+    """
+    tokens = np.asarray(tokens, np.float32)
+    w = np.asarray(router_w, np.float32)
+    logits = tokens @ w
+    z = logits - logits.max(axis=-1, keepdims=True)
+    probs = np.exp(z)
+    probs /= probs.sum(axis=-1, keepdims=True)
+    expert = np.argsort(-probs, axis=-1, kind="stable")[:, :top_k]
+    gate = np.take_along_axis(probs, expert, axis=-1)
+    gate = gate / np.maximum(gate.sum(axis=-1, keepdims=True), 1e-9)
+    return expert.astype(np.int64), gate.astype(np.float32)
 
 
 def _round_up(x: int, m: int) -> int:

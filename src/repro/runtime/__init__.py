@@ -5,8 +5,10 @@ its mechanisms; elastic.py carries the fault-tolerance posture for the
 training/serving side of the repo.
 """
 from .api import ReapRuntime, RuntimeConfig, default_runtime  # noqa: F401
-from .pipeline import (GatherChunkSet, OverlapStats,  # noqa: F401
-                       cholesky_execute_overlapped, chunk_row_bounds,
-                       run_overlapped, spgemm_gather_chunked)
+from .pipeline import (BlockChunk, BlockChunkSet,  # noqa: F401
+                       GatherChunkSet, OverlapStats,
+                       build_block_chunkset, cholesky_execute_overlapped,
+                       chunk_row_bounds, run_overlapped,
+                       spgemm_block_chunked, spgemm_gather_chunked)
 from .plan_cache import (CacheStats, PlanCache, deserialize_plan,  # noqa: F401
                          serialize_plan)

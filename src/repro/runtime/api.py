@@ -11,6 +11,13 @@ dispatch, the Fig-10 sweep) should call instead of ``core.spgemm.spgemm`` /
 
 Same pattern + different values ⇒ cache hit ⇒ the inspector cost from the
 paper's Fig 7 split drops out of the steady state entirely.
+
+The runtime owns no executor of its own: cached plans are handed to the
+*same* planned-execution entry points the library exposes —
+``core.spgemm.spgemm(plan=...)`` / ``core.cholesky.cholesky(plan=...)`` for
+synchronous calls, ``runtime.pipeline`` for chunk-overlapped ones — so the
+"library" and "runtime" halves of the codebase share one execute+stats path
+(see docs/architecture.md).
 """
 from __future__ import annotations
 
@@ -21,15 +28,17 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cholesky import cholesky_execute
+from repro.core.cholesky import cholesky as planned_cholesky
 from repro.core.etree import CholeskyPlan, inspect_cholesky
 from repro.core.formats import CSR
-from repro.core.inspector import (choose_spgemm_path, fingerprint_pattern,
-                                  inspect_spgemm_block, inspect_spgemm_gather)
-from repro.core.spgemm import (block_result_to_dense, spgemm_block_execute,
-                               spgemm_gather_execute)
+from repro.core.inspector import (MoeDispatchPlan, choose_spgemm_path,
+                                  csr_pattern_digest, fingerprint_pattern,
+                                  inspect_moe_dispatch, inspect_spgemm_block,
+                                  inspect_spgemm_gather, routing_csr)
+from repro.core.spgemm import spgemm as planned_spgemm
 
-from .pipeline import (GatherChunkSet, cholesky_execute_overlapped,
+from .pipeline import (BlockChunkSet, GatherChunkSet,
+                       cholesky_execute_overlapped, spgemm_block_chunked,
                        spgemm_gather_chunked)
 from .plan_cache import PlanCache
 
@@ -45,6 +54,7 @@ class RuntimeConfig:
     tile: int = 1024
     block: int = 128
     use_pallas: bool = True
+    moe_capacity_factor: float = 1.25
 
 
 class ReapRuntime:
@@ -67,25 +77,31 @@ class ReapRuntime:
         """C = A @ B through the plan cache, overlapped when chunkable."""
         cfg = self.config
         overlap = cfg.overlap if overlap is None else overlap
+        # each operand pattern is hashed exactly once per call; the routing
+        # key and the plan key below both reuse these digests
+        digests = (csr_pattern_digest(a), csr_pattern_digest(b))
         if method == "auto":
             # the routing heuristic builds A's block structure (O(nnz log
             # nnz)); cache the decision per pattern like any other plan
-            route_fp = fingerprint_pattern("route", (a, b), block=cfg.block)
+            route_fp = fingerprint_pattern("route", (a, b), digests,
+                                           block=cfg.block)
             method, _ = self._routes.get_or_build(
                 route_fp, lambda: choose_spgemm_path(a, b, cfg.block))
 
         if method == "gather":
             if cfg.n_chunks > 1:
-                return self._spgemm_gather_chunked(a, b, overlap)
-            return self._spgemm_gather_sync(a, b)
+                return self._spgemm_gather_chunked(a, b, overlap, digests)
+            return self._spgemm_gather_sync(a, b, digests)
         if method == "block":
-            return self._spgemm_block(a, b)
+            if cfg.n_chunks > 1:
+                return self._spgemm_block_chunked(a, b, overlap, digests)
+            return self._spgemm_block_sync(a, b, digests)
         raise ValueError(f"unknown method {method!r}")
 
-    def _spgemm_gather_chunked(self, a: CSR, b: CSR, overlap: bool
-                               ) -> Tuple[CSR, dict]:
+    def _spgemm_gather_chunked(self, a: CSR, b: CSR, overlap: bool,
+                               digests) -> Tuple[CSR, dict]:
         cfg = self.config
-        fp = fingerprint_pattern("spgemm_gather_chunked", (a, b),
+        fp = fingerprint_pattern("spgemm_gather_chunked", (a, b), digests,
                                  tile=cfg.tile, n_chunks=cfg.n_chunks)
         cached: Optional[GatherChunkSet] = self.cache.get(fp)
         c, stats, chunkset = spgemm_gather_chunked(
@@ -97,37 +113,46 @@ class ReapRuntime:
         stats.update(cache_hit=cached is not None, fingerprint=fp.digest)
         return c, stats
 
-    def _spgemm_gather_sync(self, a: CSR, b: CSR) -> Tuple[CSR, dict]:
-        fp = fingerprint_pattern("spgemm_gather", (a, b), tile=self.config.tile)
+    def _spgemm_gather_sync(self, a: CSR, b: CSR, digests
+                            ) -> Tuple[CSR, dict]:
+        cfg = self.config
+        fp = fingerprint_pattern("spgemm_gather", (a, b), digests,
+                                 tile=cfg.tile)
         t0 = time.perf_counter()
         plan, hit = self.cache.get_or_build(
-            fp, lambda: inspect_spgemm_gather(a, b, self.config.tile, fp))
+            fp, lambda: inspect_spgemm_gather(a, b, cfg.tile, fp))
         inspect_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        c_data = spgemm_gather_execute(plan, a.data, b.data)
-        exec_s = time.perf_counter() - t0
-        c = CSR(a.n_rows, b.n_cols, plan.c_indptr, plan.c_indices, c_data)
-        stats = dict(method="gather", cache_hit=hit, inspect_s=inspect_s,
-                     execute_s=exec_s, overlap=False, flops=plan.flops(),
-                     n_pp=plan.n_pp, fingerprint=fp.digest)
+        c, stats = planned_spgemm(a, b, plan=plan)
+        stats.update(cache_hit=hit, inspect_s=inspect_s, overlap=False,
+                     fingerprint=fp.digest)
         return c, stats
 
-    def _spgemm_block(self, a: CSR, b: CSR) -> Tuple[CSR, dict]:
+    def _spgemm_block_chunked(self, a: CSR, b: CSR, overlap: bool,
+                              digests) -> Tuple[CSR, dict]:
         cfg = self.config
-        fp = fingerprint_pattern("spgemm_block", (a, b), block=cfg.block)
+        fp = fingerprint_pattern("spgemm_block_chunked", (a, b), digests,
+                                 block=cfg.block, n_chunks=cfg.n_chunks)
+        cached: Optional[BlockChunkSet] = self.cache.get(fp)
+        c, stats, chunkset = spgemm_block_chunked(
+            a, b, block=cfg.block, n_chunks=cfg.n_chunks, overlap=overlap,
+            use_pallas=cfg.use_pallas, chunkset=cached)
+        if cached is None:
+            chunkset.fingerprint = fp
+            self.cache.put(fp, chunkset)
+        stats.update(cache_hit=cached is not None, fingerprint=fp.digest)
+        return c, stats
+
+    def _spgemm_block_sync(self, a: CSR, b: CSR, digests
+                           ) -> Tuple[CSR, dict]:
+        cfg = self.config
+        fp = fingerprint_pattern("spgemm_block", (a, b), digests,
+                                 block=cfg.block)
         t0 = time.perf_counter()
         plan, hit = self.cache.get_or_build(
             fp, lambda: inspect_spgemm_block(a, b, cfg.block, fp))
         inspect_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        c_blocks = spgemm_block_execute(plan, a.data, b.data,
-                                        use_pallas=cfg.use_pallas)
-        exec_s = time.perf_counter() - t0
-        dense = block_result_to_dense(plan, c_blocks)
-        c = CSR.from_dense(dense[:a.n_rows, :b.n_cols])
-        stats = dict(method="block", cache_hit=hit, inspect_s=inspect_s,
-                     execute_s=exec_s, overlap=False, flops=plan.flops(),
-                     n_pairs=plan.n_pairs, fill=plan.a_pat.fill,
+        c, stats = planned_spgemm(a, b, plan=plan, use_pallas=cfg.use_pallas)
+        stats.update(cache_hit=hit, inspect_s=inspect_s, overlap=False,
                      fingerprint=fp.digest)
         return c, stats
 
@@ -145,15 +170,54 @@ class ReapRuntime:
         plan, hit = self.cache.get_or_build(
             fp, lambda: inspect_cholesky(a, fp))
         inspect_s = time.perf_counter() - t0
-        a_vals = plan.a_values(a)
         if overlap:
-            vals, stats = cholesky_execute_overlapped(plan, a_vals, dtype,
-                                                      overlap=True)
+            vals, stats = cholesky_execute_overlapped(plan, plan.a_values(a),
+                                                      dtype, overlap=True)
         else:
-            vals, stats = cholesky_execute(plan, a_vals, dtype)
+            _, vals, stats = planned_cholesky(a, dtype, plan=plan)
             stats["overlap"] = False
         stats.update(cache_hit=hit, inspect_s=inspect_s, fingerprint=fp.digest)
         return plan, vals, stats
+
+    # -- MoE dispatch ------------------------------------------------------
+
+    def moe_dispatch(self, tokens: np.ndarray, expert_ids: np.ndarray,
+                     *, n_experts: int, capacity: Optional[int] = None
+                     ) -> Tuple[np.ndarray, MoeDispatchPlan, dict]:
+        """Plan-cached MoE dispatch: tokens → (n_experts, capacity, d) RIR
+        bundles for the grouped expert GEMM (kernels.moe_gemm).
+
+        The token→expert assignment (``expert_ids``, from the router —
+        ``models.moe.host_route`` on the host path) is the sparsity pattern
+        here: it is fingerprinted under the ``moe_dispatch`` op tag, so
+        repeated routings (decode steps with a sticky router, re-scored
+        batches, replayed traces) hit a warm bundling plan and the dispatch
+        cost collapses to two gathers.  Gate values never enter the key; pass
+        them to ``plan.combine`` after the expert GEMM.
+        """
+        cfg = self.config
+        tokens = np.asarray(tokens)
+        expert_ids = np.asarray(expert_ids)
+        t, k = expert_ids.shape
+        if capacity is None:
+            from repro.models.moe import expert_capacity
+            capacity = expert_capacity(t, n_experts, k,
+                                       cfg.moe_capacity_factor)
+        routing = routing_csr(expert_ids, n_experts)
+        fp = fingerprint_pattern("moe_dispatch", (routing,),
+                                 capacity=capacity)
+        t0 = time.perf_counter()
+        plan, hit = self.cache.get_or_build(
+            fp, lambda: inspect_moe_dispatch(routing, capacity, fp))
+        inspect_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        x_bundles = plan.bundle(tokens)
+        bundle_s = time.perf_counter() - t0
+        stats = dict(method="moe_dispatch", cache_hit=hit,
+                     inspect_s=inspect_s, bundle_s=bundle_s,
+                     capacity=capacity, dropped=plan.dropped_frac,
+                     fingerprint=fp.digest)
+        return x_bundles, plan, stats
 
     # -- Introspection -----------------------------------------------------
 

@@ -18,6 +18,7 @@ chunked schedule synchronously (the baseline the benchmarks compare against).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional, Tuple
@@ -29,9 +30,11 @@ import jax.numpy as jnp
 from repro.core.cholesky import (emit_level_bundle, init_values, _level_step)
 from repro.core.etree import CholeskyPlan
 from repro.core.formats import CSR
-from repro.core.inspector import (PatternFingerprint, SpGemmGatherPlan,
+from repro.core.inspector import (PatternFingerprint, SpGemmBlockPlan,
+                                  SpGemmGatherPlan, inspect_spgemm_block,
                                   inspect_spgemm_gather)
-from repro.core.spgemm import spgemm_gather_execute_chunk
+from repro.core.spgemm import (block_result_to_csr, _block_execute_jnp,
+                               spgemm_gather_execute_chunk)
 
 
 @dataclasses.dataclass
@@ -52,6 +55,27 @@ class OverlapStats:
     @property
     def hidden_s(self) -> float:
         return max(0.0, self.inspect_s + self.execute_s - self.wall_s)
+
+
+_EMIT_POOL: Optional[ThreadPoolExecutor] = None
+_EMIT_POOL_LOCK = threading.Lock()
+
+
+def _emit_pool() -> ThreadPoolExecutor:
+    """Process-wide single worker for bundle emission.
+
+    Created once (under a lock) and reused so a pipelined call does not pay
+    OS thread spawn.  One worker deliberately serializes emission across
+    concurrent pipelines in the same process, exactly like the paper's
+    single CPU feeding the input controller — concurrent ReapRuntime calls
+    share the emission core rather than oversubscribing the host.
+    """
+    global _EMIT_POOL
+    with _EMIT_POOL_LOCK:
+        if _EMIT_POOL is None:
+            _EMIT_POOL = ThreadPoolExecutor(max_workers=1,
+                                            thread_name_prefix="reap-emit")
+    return _EMIT_POOL
 
 
 def run_overlapped(n_chunks: int,
@@ -82,8 +106,9 @@ def run_overlapped(n_chunks: int,
             results.append(execute_fn(k, art))
             execute_s += time.perf_counter() - t0
     else:
-        with ThreadPoolExecutor(max_workers=1) as pool:
-            fut = pool.submit(timed_inspect, 0)
+        pool = _emit_pool()
+        fut = pool.submit(timed_inspect, 0)
+        try:
             for k in range(n_chunks):
                 art, dt = fut.result()
                 inspect_s += dt
@@ -92,6 +117,15 @@ def run_overlapped(n_chunks: int,
                 t0 = time.perf_counter()
                 results.append(execute_fn(k, art))
                 execute_s += time.perf_counter() - t0
+        finally:
+            # on an execute_fn error, settle the in-flight prefetch so the
+            # shared worker is idle (and its exception consumed) before the
+            # caller unwinds — the per-call-pool join this pool replaced
+            fut.cancel()
+            try:
+                fut.exception()
+            except BaseException:       # CancelledError is a BaseException
+                pass
     stats = OverlapStats(n_chunks, overlap and n_chunks > 1, inspect_s,
                          execute_s, time.perf_counter() - t_wall)
     return results, stats
@@ -178,6 +212,200 @@ def spgemm_gather_chunked(a: CSR, b: CSR, n_chunks: int = 4,
                  n_pp=sum(p.n_pp for p in plans),
                  flops=sum(p.flops() for p in plans))
     return c, stats, out_set
+
+
+# ---------------------------------------------------------------------------
+# Chunked SpGEMM (block/MXU path) — schedule groups as chunk boundaries
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class BlockChunk:
+    """One output-group-aligned slice of a block plan's pair schedule.
+
+    Ids are chunk-local: ``a_id``/``b_id`` index the chunk's compact operand
+    tile arrays, ``out_id`` is 0-based within the chunk.  The ``*_sel`` /
+    ``*_eblk``/``*_erow``/``*_ecol`` arrays are the chunk-local scatter maps
+    (which source CSR elements land where in the chunk's operand tiles) —
+    the per-call value pass the pipeline overlaps with device execution.
+    """
+
+    a_id: np.ndarray
+    b_id: np.ndarray
+    out_id: np.ndarray
+    is_first: np.ndarray
+    is_last: np.ndarray
+    n_out_blocks: int
+    n_a_blocks: int
+    n_b_blocks: int
+    a_sel: np.ndarray
+    a_eblk: np.ndarray
+    a_erow: np.ndarray
+    a_ecol: np.ndarray
+    b_sel: np.ndarray
+    b_eblk: np.ndarray
+    b_erow: np.ndarray
+    b_ecol: np.ndarray
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.a_id.shape[0])
+
+
+@dataclasses.dataclass(eq=False)
+class BlockChunkSet:
+    """Cached artifact of a chunked block inspection: the full plan plus its
+    output-group-aligned chunk slices.  Pattern-pure like every plan.
+
+    Chunk slices are built lazily — ``chunk(k)`` materializes on first use,
+    so the overlapped pipeline constructs chunk *k+1*'s slice on the worker
+    thread while the device executes chunk *k* (the gather path builds its
+    per-chunk plans the same way).  A cached (warm) chunk set is fully
+    materialized and ``chunk(k)`` degenerates to a list lookup.
+    """
+
+    plan: SpGemmBlockPlan
+    out_bounds: np.ndarray          # (n_chunks+1,) out-block index bounds
+    pair_bounds: np.ndarray         # (n_chunks+1,) pair index bounds
+    chunks: List[Optional[BlockChunk]]
+    fingerprint: Optional[PatternFingerprint] = None
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+    def chunk(self, k: int) -> BlockChunk:
+        if self.chunks[k] is None:
+            self.chunks[k] = _build_block_chunk(
+                self.plan, int(self.out_bounds[k]),
+                int(self.pair_bounds[k]), int(self.pair_bounds[k + 1]))
+        return self.chunks[k]
+
+
+def _chunk_scatter_maps(pat, blk_ids: np.ndarray):
+    """Restrict a BsrPattern's element scatter to the given (sorted, unique)
+    block ids, re-indexed to the chunk's compact tile array."""
+    mask = np.isin(pat.elem_block, blk_ids)
+    sel = np.flatnonzero(mask)
+    local = np.searchsorted(blk_ids, pat.elem_block[sel])
+    return sel, local, pat.elem_row[sel], pat.elem_col[sel]
+
+
+def _build_block_chunk(plan: SpGemmBlockPlan, out0: int, s: int, e: int
+                       ) -> BlockChunk:
+    """Materialize one chunk slice: local schedule + operand scatter maps."""
+    a_uniq, a_local = np.unique(plan.a_id[s:e], return_inverse=True)
+    b_uniq, b_local = np.unique(plan.b_id[s:e], return_inverse=True)
+    a_sel, a_eblk, a_erow, a_ecol = _chunk_scatter_maps(plan.a_pat, a_uniq)
+    b_sel, b_eblk, b_erow, b_ecol = _chunk_scatter_maps(plan.b_pat, b_uniq)
+    n_out = int(plan.out_id[e - 1]) - out0 + 1
+    return BlockChunk(
+        a_local.astype(np.int64), b_local.astype(np.int64),
+        (plan.out_id[s:e] - out0).astype(np.int64),
+        plan.is_first[s:e].copy(), plan.is_last[s:e].copy(),
+        n_out, int(a_uniq.shape[0]), int(b_uniq.shape[0]),
+        a_sel, a_eblk, a_erow, a_ecol, b_sel, b_eblk, b_erow, b_ecol)
+
+
+def build_block_chunkset(plan: SpGemmBlockPlan, n_chunks: int,
+                         lazy: bool = False) -> BlockChunkSet:
+    """Split a block plan's pair schedule into ≤ n_chunks chunks.
+
+    The schedule is sorted by output block with ``is_first``/``is_last``
+    marking group runs, so cutting only at group starts keeps every output
+    block whole within one chunk — per-chunk results are disjoint slices of
+    the output tile array and concatenate exactly.
+
+    With ``lazy=True`` only the (cheap) bounds are computed; chunk slices
+    materialize on first ``chunk(k)`` — inside the overlapped pipeline's
+    emit stage, where their cost hides under device execution.
+    """
+    n_out = plan.n_out_blocks
+    if n_out == 0 or plan.n_pairs == 0:
+        return BlockChunkSet(plan, np.zeros(1, np.int64),
+                             np.zeros(1, np.int64), [])
+    n_chunks = max(1, min(n_chunks, n_out))
+    group_starts = np.flatnonzero(plan.is_first)        # (n_out,)
+    # pair-balanced cuts, snapped to group boundaries
+    targets = plan.n_pairs * np.arange(1, n_chunks) / n_chunks
+    cuts = np.searchsorted(group_starts, targets, side="left")
+    ob = np.unique(np.concatenate([[0], cuts, [n_out]])).astype(np.int64)
+    pair_bounds = np.concatenate([group_starts[ob[:-1]], [plan.n_pairs]])
+    chunkset = BlockChunkSet(plan, ob, pair_bounds,
+                             [None] * (len(ob) - 1))
+    if not lazy:
+        for k in range(chunkset.n_chunks):
+            chunkset.chunk(k)
+    return chunkset
+
+
+def spgemm_block_chunked(a: CSR, b: CSR, block: int = 128, n_chunks: int = 4,
+                         overlap: bool = True, use_pallas: bool = True,
+                         chunkset: Optional[BlockChunkSet] = None
+                         ) -> Tuple[CSR, dict, BlockChunkSet]:
+    """C = A @ B on the MXU path with per-chunk emit/execute overlap.
+
+    The bundle-emit stage per chunk — scattering the chunk's operand CSR
+    values into compact MXU tiles — runs on the worker thread while the
+    device executes the previous chunk's tile dots (the gather path's
+    pipeline, applied to the block executor).  Returns (C, stats, chunkset)
+    so callers can cache the chunk set; a warm chunkset skips plan-build
+    entirely and the pipeline is scatter+execute only.
+    """
+    t0 = time.perf_counter()
+    if chunkset is None:
+        plan = inspect_spgemm_block(a, b, block)
+        # bounds only: chunk slices materialize inside the emit stage, one
+        # chunk ahead of the device (hidden under execution when overlapped)
+        chunkset = build_block_chunkset(plan, n_chunks, lazy=True)
+    plan = chunkset.plan
+    plan_s = time.perf_counter() - t0
+
+    base = dict(method="block_chunked", n_chunks=chunkset.n_chunks,
+                plan_s=plan_s, flops=plan.flops(), n_pairs=plan.n_pairs,
+                fill=plan.a_pat.fill)
+    if not chunkset.chunks:
+        zero = np.zeros((plan.n_out_blocks, plan.block, plan.block),
+                        np.float32)
+        c = block_result_to_csr(plan, zero, a.n_rows, b.n_cols)
+        base.update(overlap=False, inspect_s=0.0, execute_s=0.0,
+                    wall_s=plan_s, hidden_s=0.0)
+        return c, base, chunkset
+
+    bs = plan.block
+
+    def inspect_fn(k: int):
+        ch = chunkset.chunk(k)
+        a_blocks = np.zeros((ch.n_a_blocks, bs, bs), np.float32)
+        a_blocks[ch.a_eblk, ch.a_erow, ch.a_ecol] = a.data[ch.a_sel]
+        b_blocks = np.zeros((ch.n_b_blocks, bs, bs), np.float32)
+        b_blocks[ch.b_eblk, ch.b_erow, ch.b_ecol] = b.data[ch.b_sel]
+        return ch, a_blocks, b_blocks
+
+    def execute_fn(k: int, emitted) -> np.ndarray:
+        ch, a_blocks, b_blocks = emitted
+        if use_pallas:
+            from repro.kernels import ops as kops
+            sched = {"a_id": ch.a_id.astype(np.int32),
+                     "b_id": ch.b_id.astype(np.int32),
+                     "out_id": ch.out_id.astype(np.int32),
+                     "is_first": ch.is_first.astype(np.int32),
+                     "is_last": ch.is_last.astype(np.int32)}
+            return np.asarray(kops.bsr_spgemm_schedule(
+                sched, jnp.asarray(a_blocks), jnp.asarray(b_blocks),
+                n_out_blocks=ch.n_out_blocks))
+        return np.asarray(_block_execute_jnp(
+            jnp.asarray(a_blocks), jnp.asarray(b_blocks),
+            jnp.asarray(ch.a_id), jnp.asarray(ch.b_id),
+            jnp.asarray(ch.out_id), n_out=ch.n_out_blocks))
+
+    results, ostats = run_overlapped(chunkset.n_chunks, inspect_fn,
+                                     execute_fn, overlap)
+    c_blocks = np.concatenate(results, axis=0)
+    c = block_result_to_csr(plan, c_blocks, a.n_rows, b.n_cols)
+    base.update(overlap=ostats.overlap, inspect_s=ostats.inspect_s,
+                execute_s=ostats.execute_s, wall_s=ostats.wall_s,
+                hidden_s=ostats.hidden_s)
+    return c, base, chunkset
 
 
 # ---------------------------------------------------------------------------

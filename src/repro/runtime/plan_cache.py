@@ -22,8 +22,11 @@ from typing import Callable, Dict, Optional
 import numpy as np
 
 from repro.core.etree import CholeskyPlan
-from repro.core.inspector import (BsrPattern, PatternFingerprint,
-                                  SpGemmBlockPlan, SpGemmGatherPlan)
+from repro.core.inspector import (BsrPattern, MoeDispatchPlan,
+                                  PatternFingerprint, SpGemmBlockPlan,
+                                  SpGemmGatherPlan)
+
+from .pipeline import BlockChunk, BlockChunkSet, GatherChunkSet
 
 
 @dataclasses.dataclass
@@ -100,7 +103,11 @@ class PlanCache:
 _PLAN_TYPES = {"spgemm_gather": SpGemmGatherPlan,
                "spgemm_block": SpGemmBlockPlan,
                "cholesky": CholeskyPlan,
-               "bsr_pattern": BsrPattern}
+               "bsr_pattern": BsrPattern,
+               "moe_dispatch": MoeDispatchPlan,
+               "gather_chunkset": GatherChunkSet,
+               "block_chunkset": BlockChunkSet,
+               "block_chunk": BlockChunk}
 _TYPE_NAMES = {v: k for k, v in _PLAN_TYPES.items()}
 
 
@@ -116,9 +123,18 @@ def _flatten(obj, prefix: str, out: Dict[str, np.ndarray]) -> None:
         elif isinstance(v, (int, float)):
             out[key] = np.asarray(v)
         elif isinstance(v, list):
+            # lists hold either leaf arrays (CholeskyPlan levels) or nested
+            # plan dataclasses (chunk sets); items may mix, keyed per index
             out[key + "__len"] = np.asarray(len(v))
             for i, item in enumerate(v):
-                out[f"{key}__{i}"] = np.asarray(item)
+                if dataclasses.is_dataclass(item):
+                    _flatten(item, f"{key}__{i}::", out)
+                elif item is None:
+                    raise TypeError(
+                        f"unserializable None in list field {f.name}[{i}] "
+                        "(unmaterialized lazy chunk?)")
+                else:
+                    out[f"{key}__{i}"] = np.asarray(item)
         elif dataclasses.is_dataclass(v):
             _flatten(v, key + "::", out)
         else:
@@ -140,7 +156,13 @@ def _unflatten(data: Dict[str, np.ndarray], prefix: str):
             kwargs[f.name] = v
         elif key + "__len" in data:
             n = int(data[key + "__len"])
-            kwargs[f.name] = [np.asarray(data[f"{key}__{i}"]) for i in range(n)]
+            items = []
+            for i in range(n):
+                if f"{key}__{i}::__type" in data:
+                    items.append(_unflatten(data, f"{key}__{i}::"))
+                else:
+                    items.append(np.asarray(data[f"{key}__{i}"]))
+            kwargs[f.name] = items
         elif key + "::__type" in data:
             kwargs[f.name] = _unflatten(data, key + "::")
         else:
@@ -150,6 +172,9 @@ def _unflatten(data: Dict[str, np.ndarray], prefix: str):
 
 def serialize_plan(plan) -> Dict[str, np.ndarray]:
     """Plan → flat dict of numpy arrays (pass to ``np.savez`` to persist)."""
+    if isinstance(plan, BlockChunkSet):
+        for k in range(plan.n_chunks):
+            plan.chunk(k)               # materialize lazy slices first
     out: Dict[str, np.ndarray] = {}
     _flatten(plan, "", out)
     return out

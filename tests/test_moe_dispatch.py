@@ -1,0 +1,146 @@
+"""MoE dispatch through the plan cache: the routing pattern is fingerprinted
+under the ``moe_dispatch`` op tag and the bundling plan is reused across
+same-routing-different-values calls (ROADMAP: "same fingerprint machinery,
+different op tag")."""
+import numpy as np
+import pytest
+
+from repro.core import (MoeDispatchPlan, fingerprint_pattern,
+                        inspect_moe_dispatch, routing_csr)
+from repro.models.moe import expert_capacity, host_route
+from repro.runtime import ReapRuntime, deserialize_plan, serialize_plan
+
+T, D, E, K = 48, 12, 6, 2
+
+
+def _routing(seed: int):
+    rng = np.random.default_rng(seed)
+    tokens = rng.standard_normal((T, D)).astype(np.float32)
+    router_w = (rng.standard_normal((D, E)) * 0.5).astype(np.float32)
+    expert_ids, gates = host_route(tokens, router_w, top_k=K)
+    return tokens, expert_ids, gates
+
+
+def _oracle_combine(tokens, expert_ids, gates, capacity, d_out_fn):
+    """Independent FIFO-capacity oracle: per expert, the first ``capacity``
+    assignments in flat row-major order are kept; everything else drops."""
+    t, k = expert_ids.shape
+    used = np.zeros(E, dtype=int)
+    out = np.zeros((t, tokens.shape[1]), np.float64)
+    for i in range(t * k):
+        tok, e = i // k, int(expert_ids.reshape(-1)[i])
+        if used[e] < capacity:
+            used[e] += 1
+            out[tok] += gates.reshape(-1)[i] * d_out_fn(tokens[tok], e)
+    return out
+
+
+class TestDispatchPlan:
+    def test_bundle_combine_identity_experts(self):
+        tokens, expert_ids, gates = _routing(0)
+        cap = expert_capacity(T, E, K, 1.25)
+        plan = inspect_moe_dispatch(routing_csr(expert_ids, E), cap)
+        x_bundles = plan.bundle(tokens)
+        assert x_bundles.shape == (E, cap, D)
+        # identity experts: y == gate-weighted sum of kept assignments
+        y = plan.combine(x_bundles, gates)
+        ref = _oracle_combine(tokens, expert_ids, gates, cap,
+                              lambda x, e: x)
+        np.testing.assert_allclose(y, ref, rtol=1e-5, atol=1e-6)
+
+    def test_overflow_drops_in_flat_order(self):
+        # force overflow: every token routed to expert 0
+        expert_ids = np.zeros((T, 1), dtype=np.int64)
+        cap = 8
+        plan = inspect_moe_dispatch(routing_csr(expert_ids, E), cap)
+        assert plan.keep.sum() == cap                 # first cap kept
+        assert plan.keep[:cap].all() and not plan.keep[cap:].any()
+        assert plan.dropped_frac == pytest.approx(1 - cap / T)
+
+    def test_plan_is_pattern_pure(self):
+        _, expert_ids, _ = _routing(1)
+        cap = expert_capacity(T, E, K, 1.25)
+        p1 = inspect_moe_dispatch(routing_csr(expert_ids, E), cap)
+        p2 = inspect_moe_dispatch(routing_csr(expert_ids.copy(), E), cap)
+        np.testing.assert_array_equal(p1.dest, p2.dest)
+        np.testing.assert_array_equal(p1.slot_token, p2.slot_token)
+
+    def test_serialization_roundtrip(self):
+        _, expert_ids, _ = _routing(2)
+        plan = inspect_moe_dispatch(routing_csr(expert_ids, E), 16)
+        back = deserialize_plan(serialize_plan(plan))
+        assert isinstance(back, MoeDispatchPlan)
+        np.testing.assert_array_equal(back.dest, plan.dest)
+        np.testing.assert_array_equal(back.slot_token, plan.slot_token)
+        assert back.capacity == plan.capacity
+
+
+class TestOpTagSeparation:
+    def test_same_pattern_different_op_never_collides(self):
+        _, expert_ids, _ = _routing(3)
+        routing = routing_csr(expert_ids, E)
+        fp_moe = fingerprint_pattern("moe_dispatch", (routing,), capacity=16)
+        fp_other = fingerprint_pattern("spgemm_gather", (routing,),
+                                       capacity=16)
+        assert fp_moe != fp_other
+        assert fp_moe.digest == fp_other.digest   # same pattern bytes …
+        assert fp_moe.op != fp_other.op           # … distinct op tag
+
+    def test_k_order_matters(self):
+        # same expert sets per token, different top-k order ⇒ different key
+        _, expert_ids, _ = _routing(4)
+        swapped = expert_ids[:, ::-1].copy()
+        fp1 = fingerprint_pattern("moe_dispatch",
+                                  (routing_csr(expert_ids, E),), capacity=16)
+        fp2 = fingerprint_pattern("moe_dispatch",
+                                  (routing_csr(swapped, E),), capacity=16)
+        assert fp1 != fp2
+
+
+class TestRuntimeAdmission:
+    def test_warm_hit_on_repeated_routing(self):
+        rt = ReapRuntime()
+        tokens, expert_ids, gates = _routing(5)
+        xb0, p0, st0 = rt.moe_dispatch(tokens, expert_ids, n_experts=E)
+        # same routing, fresh token values ⇒ hit, same plan object
+        tokens2 = tokens * 1.7
+        xb1, p1, st1 = rt.moe_dispatch(tokens2, expert_ids, n_experts=E)
+        assert not st0["cache_hit"] and st1["cache_hit"]
+        assert p0 is p1
+        np.testing.assert_allclose(xb1, xb0 * 1.7, rtol=1e-5, atol=1e-6)
+
+    def test_miss_on_different_routing_or_capacity(self):
+        rt = ReapRuntime()
+        tokens, expert_ids, _ = _routing(6)
+        _, _, st0 = rt.moe_dispatch(tokens, expert_ids, n_experts=E)
+        _, e2, _ = _routing(7)
+        _, _, st1 = rt.moe_dispatch(tokens, e2, n_experts=E)
+        _, _, st2 = rt.moe_dispatch(tokens, expert_ids, n_experts=E,
+                                    capacity=64)
+        assert not st0["cache_hit"] and not st1["cache_hit"]
+        assert not st2["cache_hit"]
+
+    def test_moe_and_spgemm_share_one_cache(self):
+        from repro.core import random_csr
+        rt = ReapRuntime(n_chunks=1, use_pallas=False)
+        tokens, expert_ids, _ = _routing(8)
+        rt.moe_dispatch(tokens, expert_ids, n_experts=E)
+        a = random_csr(40, 40, 0.1, np.random.default_rng(9))
+        rt.spgemm(a, a, method="gather")
+        stats = rt.cache_stats()
+        assert stats["entries"] == 2 and stats["misses"] == 2
+
+
+class TestScheduleKernel:
+    def test_moe_gemm_schedule_matches_einsum(self):
+        from repro.kernels import ops
+        tokens, expert_ids, _ = _routing(10)
+        cap = expert_capacity(T, E, K, 1.25)
+        plan = inspect_moe_dispatch(routing_csr(expert_ids, E), cap)
+        x_bundles = plan.bundle(tokens).astype(np.float32)
+        rng = np.random.default_rng(11)
+        w = (rng.standard_normal((E, D, D)) / np.sqrt(D)).astype(np.float32)
+        y = np.asarray(ops.moe_gemm_schedule(plan.schedule, x_bundles, w,
+                                             bk=D, bf=D))
+        ref = np.einsum("ecd,edf->ecf", x_bundles, w)
+        np.testing.assert_allclose(y, ref, rtol=1e-3, atol=1e-3)

@@ -6,8 +6,9 @@ from repro.core import (CSR, cholesky_values, fingerprint_pattern,
                         inspect_cholesky, inspect_spgemm_block,
                         inspect_spgemm_gather, random_csr, random_spd_csr,
                         spgemm_ref_numpy)
-from repro.runtime import (PlanCache, ReapRuntime, deserialize_plan,
-                           serialize_plan)
+from repro.runtime import (BlockChunkSet, GatherChunkSet, PlanCache,
+                           ReapRuntime, deserialize_plan, serialize_plan,
+                           spgemm_block_chunked, spgemm_gather_chunked)
 
 
 def _rand(n, m, density, seed=0, pattern="uniform"):
@@ -184,3 +185,40 @@ class TestSerialization:
         v1, _ = cholesky_execute(plan, cholesky_values(a))
         v2, _ = cholesky_execute(back, cholesky_values(a))
         np.testing.assert_array_equal(v1, v2)
+
+
+class TestChunkSetSerialization:
+    """Overlapped (chunked) plans must survive a save/load round-trip."""
+
+    def test_gather_chunkset_roundtrip_executes(self, tmp_path):
+        a, b = _rand(90, 90, 0.06, 11), _rand(90, 90, 0.06, 12)
+        c_ref, _, chunkset = spgemm_gather_chunked(a, b, n_chunks=3)
+        path = tmp_path / "chunkset.npz"
+        np.savez(path, **serialize_plan(chunkset))
+        with np.load(path, allow_pickle=False) as data:
+            back = deserialize_plan(data)
+        assert isinstance(back, GatherChunkSet)
+        assert back.n_chunks == chunkset.n_chunks
+        np.testing.assert_array_equal(back.row_bounds, chunkset.row_bounds)
+        for p, q in zip(back.plans, chunkset.plans):
+            np.testing.assert_array_equal(p.a_idx, q.a_idx)
+            np.testing.assert_array_equal(p.out_idx, q.out_idx)
+        # the deserialized chunk set drives a warm overlapped run exactly
+        c, stats, _ = spgemm_gather_chunked(a, b, n_chunks=3, chunkset=back)
+        np.testing.assert_array_equal(c.to_dense(), c_ref.to_dense())
+
+    def test_block_chunkset_roundtrip_executes(self, tmp_path):
+        a = _rand(96, 96, 0.08, 13, "blocky")
+        c_ref, _, chunkset = spgemm_block_chunked(a, a, block=16, n_chunks=3,
+                                                  use_pallas=False)
+        path = tmp_path / "block_chunkset.npz"
+        np.savez(path, **serialize_plan(chunkset))
+        with np.load(path, allow_pickle=False) as data:
+            back = deserialize_plan(data)
+        assert isinstance(back, BlockChunkSet)
+        assert back.n_chunks == chunkset.n_chunks
+        c, stats, out_set = spgemm_block_chunked(a, a, block=16, n_chunks=3,
+                                                 use_pallas=False,
+                                                 chunkset=back)
+        assert out_set is back           # warm: no rebuild
+        np.testing.assert_array_equal(c.to_dense(), c_ref.to_dense())

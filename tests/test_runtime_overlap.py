@@ -9,11 +9,12 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import (CSR, COO, cholesky_values, inspect_cholesky,
-                        plan_to_dense_l, random_csr, random_spd_csr,
-                        spgemm_ref_numpy)
+                        inspect_spgemm_block, plan_to_dense_l, random_csr,
+                        random_spd_csr, spgemm_ref_numpy)
 from repro.core.cholesky import cholesky_execute
-from repro.runtime import (ReapRuntime, cholesky_execute_overlapped,
-                           chunk_row_bounds, run_overlapped,
+from repro.runtime import (ReapRuntime, build_block_chunkset,
+                           cholesky_execute_overlapped, chunk_row_bounds,
+                           run_overlapped, spgemm_block_chunked,
                            spgemm_gather_chunked)
 
 
@@ -116,6 +117,75 @@ class TestChunkedSpgemm:
         np.testing.assert_allclose(c.to_dense().astype(np.float64),
                                    spgemm_ref_numpy(a, a).to_dense(),
                                    rtol=1e-4, atol=1e-5)
+
+
+class TestChunkedBlockSpgemm:
+    """Block/MXU path overlap: schedule-group chunks must match the
+    synchronous reference exactly across the pattern families."""
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    @pytest.mark.parametrize("overlap", [False, True])
+    def test_matches_reference(self, family, overlap):
+        a = _family(family, 120, 110, 0.05, 31)
+        b = _family(family, 110, 90, 0.05, 32)
+        c, stats, _ = spgemm_block_chunked(a, b, block=16, n_chunks=3,
+                                           overlap=overlap, use_pallas=False)
+        ref = spgemm_ref_numpy(a, b)
+        np.testing.assert_allclose(c.to_dense().astype(np.float64),
+                                   ref.to_dense().astype(np.float64),
+                                   rtol=1e-3, atol=1e-3)
+        assert stats["overlap"] == (overlap and stats["n_chunks"] > 1)
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_warm_chunkset_matches(self, family):
+        a = _family(family, 100, 100, 0.06, 33)
+        b = _family(family, 100, 100, 0.06, 34)
+        _, _, chunkset = spgemm_block_chunked(a, b, block=16, n_chunks=3,
+                                              use_pallas=False)
+        rng = np.random.default_rng(35)
+        a2 = CSR(a.n_rows, a.n_cols, a.indptr, a.indices,
+                 rng.standard_normal(a.nnz).astype(np.float32))
+        c, stats, out_set = spgemm_block_chunked(a2, b, block=16, n_chunks=3,
+                                                 use_pallas=False,
+                                                 chunkset=chunkset)
+        np.testing.assert_allclose(c.to_dense().astype(np.float64),
+                                   spgemm_ref_numpy(a2, b).to_dense(),
+                                   rtol=1e-3, atol=1e-3)
+        # warm: the passed-in chunk set (and its plan) is reused, not rebuilt
+        assert out_set is chunkset and out_set.plan is chunkset.plan
+
+    def test_chunks_align_to_schedule_groups(self):
+        a = _family("blockdiag", 96, 96, 0.08, 36)
+        plan = inspect_spgemm_block(a, a, 16)
+        chunkset = build_block_chunkset(plan, 4)
+        # every chunk starts at a group start and output blocks are whole
+        assert chunkset.out_bounds[0] == 0
+        assert chunkset.out_bounds[-1] == plan.n_out_blocks
+        for ch in chunkset.chunks:
+            assert ch.is_first[0] and ch.is_last[-1]
+            assert ch.out_id[0] == 0
+            assert ch.n_out_blocks == int(ch.out_id[-1]) + 1
+
+    def test_single_chunk_degenerates(self):
+        a = _family("blockdiag", 64, 64, 0.08, 37)
+        c, stats, _ = spgemm_block_chunked(a, a, block=16, n_chunks=1,
+                                           overlap=True, use_pallas=False)
+        assert stats["n_chunks"] == 1 and not stats["overlap"]
+        np.testing.assert_allclose(c.to_dense().astype(np.float64),
+                                   spgemm_ref_numpy(a, a).to_dense(),
+                                   rtol=1e-3, atol=1e-3)
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_runtime_end_to_end(self, family):
+        rt = ReapRuntime(n_chunks=3, block=16, use_pallas=False)
+        a = _family(family, 90, 90, 0.06, 38)
+        c, stats = rt.spgemm(a, a, method="block")
+        assert stats["method"] == "block_chunked"
+        np.testing.assert_allclose(c.to_dense().astype(np.float64),
+                                   spgemm_ref_numpy(a, a).to_dense(),
+                                   rtol=1e-3, atol=1e-3)
+        _, stats2 = rt.spgemm(a, a, method="block")
+        assert not stats["cache_hit"] and stats2["cache_hit"]
 
 
 def _spd_family(name: str, n: int, seed: int) -> CSR:

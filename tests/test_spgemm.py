@@ -101,3 +101,51 @@ class TestPublicAPI:
         c, _ = spgemm(a, a, method="gather")
         np.testing.assert_allclose(c.to_dense(), _dense_oracle(a, a),
                                    rtol=1e-4, atol=1e-5)
+
+
+class TestPlannedExecution:
+    """spgemm(plan=...) — the unified planned entry point the runtime uses."""
+
+    def test_gather_plan_reuse(self):
+        a, b = _rand(80, 80, 0.08, 16), _rand(80, 80, 0.08, 17)
+        plan = inspect_spgemm_gather(a, b)
+        c_plain, _ = spgemm(a, b, method="gather")
+        c_planned, stats = spgemm(a, b, plan=plan)
+        assert stats["method"] == "gather" and stats["inspect_s"] == 0.0
+        np.testing.assert_array_equal(c_planned.to_dense(),
+                                      c_plain.to_dense())
+        # same plan, fresh values (the cache-hit workload)
+        rng = np.random.default_rng(18)
+        a2 = CSR(a.n_rows, a.n_cols, a.indptr, a.indices,
+                 rng.standard_normal(a.nnz).astype(np.float32))
+        c2, _ = spgemm(a2, b, plan=plan)
+        np.testing.assert_allclose(c2.to_dense(), _dense_oracle(a2, b),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_block_plan_reuse(self):
+        a = _rand(96, 96, 0.08, 19, "blocky")
+        plan = inspect_spgemm_block(a, a, 32)
+        c_plain, _ = spgemm(a, a, method="block", block=32, use_pallas=False)
+        c_planned, stats = spgemm(a, a, plan=plan, use_pallas=False)
+        assert stats["method"] == "block" and stats["inspect_s"] == 0.0
+        np.testing.assert_array_equal(c_planned.to_dense(),
+                                      c_plain.to_dense())
+
+    def test_bad_plan_type_raises(self):
+        a = _rand(20, 20, 0.2, 20)
+        with pytest.raises(TypeError):
+            spgemm(a, a, plan=object())
+
+    def test_block_csr_extraction_matches_dense_roundtrip(self):
+        from repro.core import block_result_to_csr
+        a = _rand(90, 70, 0.07, 21, "banded")
+        b = _rand(70, 50, 0.07, 22, "banded")
+        plan = inspect_spgemm_block(a, b, 16)
+        c_blocks = np.asarray(spgemm_block_execute(plan, a.data, b.data,
+                                                   use_pallas=False))
+        via_dense = CSR.from_dense(
+            block_result_to_dense(plan, c_blocks)[:90, :50])
+        direct = block_result_to_csr(plan, c_blocks, 90, 50)
+        np.testing.assert_array_equal(direct.indptr, via_dense.indptr)
+        np.testing.assert_array_equal(direct.indices, via_dense.indices)
+        np.testing.assert_array_equal(direct.data, via_dense.data)
