@@ -11,14 +11,24 @@
    CPU-only container the "device" shares cores with the host, so this is
    the claim that overlap costs no wall time, not that it wins here.
 
-Prints ``plan_cache,...`` CSV lines and a PASS/FAIL verdict per claim.
+Prints ``plan_cache,...`` CSV lines and a PASS/FAIL verdict per claim, and
+exits non-zero when a gated claim fails (the bench.yml CI gate).  In
+``--reduced`` (CI) mode problem sizes shrink and the sync-vs-overlap rows
+are reported but **not** gated: shared CI runners make two-thread wall-time
+comparisons unreliable, while the cold-vs-warm amortization claim — the one
+the plan cache exists for — stays robust and is always enforced.
 
-    PYTHONPATH=src python -m benchmarks.bench_plan_cache
+    PYTHONPATH=src python -m benchmarks.bench_plan_cache [--reduced]
+        [--json OUT]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
-from typing import List
+from pathlib import Path
+from typing import List, Optional
 
 import numpy as np
 
@@ -179,20 +189,51 @@ def bench_cholesky(n: int = 900, density: float = 0.01, repeats: int = 3,
     return row
 
 
-def run(verbose: bool = True) -> List[dict]:
-    rows = [bench_spgemm_cache(verbose=verbose),
-            bench_spgemm_cache(method="block", density=0.02, repeats=9,
-                               verbose=verbose),
-            bench_spgemm_overlap(verbose=verbose),
-            bench_spgemm_overlap(method="block", n=4000, density=0.02,
-                                 n_chunks=8, repeats=7, tolerance=1.15,
-                                 verbose=verbose),
-            bench_cholesky(verbose=verbose)]
+def run(verbose: bool = True, reduced: bool = False) -> List[dict]:
+    if reduced:
+        rows = [bench_spgemm_cache(n=1200, verbose=verbose),
+                bench_spgemm_cache(method="block", n=1200, density=0.02,
+                                   repeats=7, verbose=verbose),
+                bench_spgemm_overlap(n=1200, verbose=verbose),
+                bench_spgemm_overlap(method="block", n=2000, density=0.02,
+                                     n_chunks=8, repeats=5, tolerance=1.15,
+                                     verbose=verbose),
+                bench_cholesky(n=600, verbose=verbose)]
+        # overlap walls are not gated on shared runners (see module doc)
+        for r in rows:
+            r["gate"] = "overlap" not in r["bench"]
+    else:
+        rows = [bench_spgemm_cache(verbose=verbose),
+                bench_spgemm_cache(method="block", density=0.02, repeats=9,
+                                   verbose=verbose),
+                bench_spgemm_overlap(verbose=verbose),
+                bench_spgemm_overlap(method="block", n=4000, density=0.02,
+                                     n_chunks=8, repeats=7, tolerance=1.15,
+                                     verbose=verbose),
+                bench_cholesky(verbose=verbose)]
+        for r in rows:
+            r["gate"] = True
     if verbose:
-        ok = all(r.get("ok", True) for r in rows)
+        ok = all(r.get("ok", True) for r in rows if r["gate"])
         print(f"plan_cache,verdict,{'PASS' if ok else 'FAIL'}")
     return rows
 
 
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--reduced", action="store_true",
+                    help="smaller problem sizes; overlap rows ungated "
+                         "(CI mode)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write result rows to this JSON file")
+    args = ap.parse_args(argv)
+    rows = run(reduced=args.reduced)
+    if args.json:
+        Path(args.json).write_text(json.dumps(
+            dict(bench="plan_cache", reduced=args.reduced, rows=rows),
+            indent=1))
+    return 0 if all(r.get("ok", True) for r in rows if r["gate"]) else 1
+
+
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

@@ -5,14 +5,13 @@ Also reproduces the §V-B finding that idle cycles grow with pipeline count
 (dependency-limited parallelism)."""
 from __future__ import annotations
 
-import time
 from typing import List
 
 import numpy as np
 
 from repro.core import cholesky_baseline_numpy, cholesky_values, inspect_cholesky
 from repro.core.cholesky import cholesky_execute
-from repro.core.simulator import (REAP_32C, REAP_64C, ReapVariant,
+from repro.core.simulator import (REAP_32C, REAP_64C,
                                   simulate_cholesky_cpu,
                                   simulate_cholesky_reap)
 

@@ -5,7 +5,6 @@ from __future__ import annotations
 
 from typing import List
 
-import numpy as np
 
 from repro.core import inspect_cholesky
 from repro.core.simulator import (REAP_32, REAP_32C, simulate_cholesky_reap,

@@ -10,7 +10,7 @@ from typing import List
 
 import numpy as np
 
-from repro.core.simulator import (CPU_FREQ, ReapVariant, simulate_spgemm_cpu,
+from repro.core.simulator import (ReapVariant, simulate_spgemm_cpu,
                                   simulate_spgemm_reap, spgemm_workload)
 
 from .table1 import SPGEMM_SET, make_spgemm_matrix

@@ -17,7 +17,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import CSR, random_csr
+from repro.core import random_csr
 from repro.core.formats import random_spd_csr
 
 

@@ -10,4 +10,5 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+# --durations=15: surface the slowest tests in CI logs
+exec python -m pytest -x -q --durations=15 "$@"

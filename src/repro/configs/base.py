@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

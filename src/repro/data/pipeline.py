@@ -12,7 +12,7 @@ uniform stream has irreducible loss = log V).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -14,7 +14,6 @@ architectures).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import numpy as np
 

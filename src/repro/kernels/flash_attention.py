@@ -84,8 +84,9 @@ def _kernel(kv_lo, n_kv, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
 
     @pl.when(j == nk_max - 1)
     def _finish():
-        l = l_s[:, :1]
-        o_ref[0, 0] = jnp.where(l > 0, acc[...] / l, 0.0).astype(o_ref.dtype)
+        lsum = l_s[:, :1]
+        o_ref[0, 0] = jnp.where(lsum > 0, acc[...] / lsum,
+                                0.0).astype(o_ref.dtype)
 
 
 @functools.partial(

@@ -38,7 +38,7 @@ from repro.launch.steps import (abstract_train_state, input_specs,
 from repro.models.model import abstract_params
 from repro.optim import adamw
 from repro.parallel import sharding as S
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 
 def cell_is_skipped(arch: str, shape_name: str):

@@ -8,8 +8,7 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
-from .roofline import _GROUPS_BRACE_RE, _GROUPS_RE, _SHAPE_RE, _group_size, \
-    _ring_bytes, _shape_bytes, _COLLECTIVES
+from .roofline import _COLLECTIVES, _group_size, _ring_bytes, _shape_bytes
 
 
 def top_collectives(hlo_text: str, k: int = 15):

@@ -69,7 +69,25 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-store", default=None, metavar="DIR",
+                    help="attach a persistent plan store to this process's "
+                         "shared ReapRuntime (repro.runtime.default_runtime)"
+                         ": any component routing sparse ops through it "
+                         "loads warm inspector plans across restarts and "
+                         "write-through-persists new ones.  The jitted "
+                         "prefill/decode path routes its MoE dispatch "
+                         "in-graph and does not consult the runtime yet "
+                         "(see ROADMAP), so with a plain LM arch this "
+                         "currently only wires and reports the store")
     args = ap.parse_args(argv)
+
+    rt = None
+    if args.plan_store:
+        from repro.runtime import configure_default_runtime
+        rt = configure_default_runtime(store_dir=args.plan_store)
+        s = rt.store.summary()
+        print(f"[serve] plan store {args.plan_store}: {s['entries']} warm "
+              f"plans, {s['bytes'] / 1e6:.2f} MB on disk")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -95,6 +113,16 @@ def main(argv=None):
         print(f"[serve] decode latency p50={np.median(lat) * 1e3:.1f}ms "
               f"p99={np.percentile(lat, 99) * 1e3:.1f}ms")
     print("[serve] first sequence:", np.asarray(seqs[0])[:16], "...")
+    if rt is not None:
+        cs = rt.cache_stats()
+        print(f"[serve] plan cache: {cs['hits']} hits, "
+              f"{cs['store_hits']} store hits, {cs['misses']} misses; "
+              f"store holds {cs['store']['entries']} plans "
+              f"({cs['store']['saves']} saved this run)")
+        if cs["hits"] + cs["store_hits"] + cs["misses"] == 0:
+            print("[serve] note: no sparse op consulted the runtime this "
+                  "run — the jitted decode path routes in-graph; the store "
+                  "serves runtime-routed callers (see --plan-store help)")
     return seqs
 
 

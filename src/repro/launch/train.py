@@ -11,13 +11,11 @@ cross-pod int8 gradient compression.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import manager as ckpt
 from repro.configs import ARCHS, get_config, reduced_config

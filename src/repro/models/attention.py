@@ -14,13 +14,12 @@ Shapes: q (B, H, S, D); k, v (B, Hkv, S, D).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .layers import rotary, softcap
+from .layers import softcap
 
 NEG_INF = -1e30
 
@@ -33,7 +32,7 @@ class AttnSpec(NamedTuple):
 
 
 def _block_attn(q, k, v, qpos, kpos, spec: AttnSpec):
-    """One (q-block, kv-block) tile: returns (m, l, acc) contributions.
+    """One (q-block, kv-block) tile: returns (m, lsum, acc) contributions.
 
     q: (B, Hkv, G, bq, D); k/v: (B, Hkv, bk, D); qpos: (bq,), kpos: (bk,).
     """
@@ -51,12 +50,12 @@ def _block_attn(q, k, v, qpos, kpos, spec: AttnSpec):
     s = jnp.where(mask, s, NEG_INF)
     m = s.max(axis=-1)                                   # (B,Hkv,G,bq)
     p = jnp.exp(s - m[..., None])
-    l = p.sum(axis=-1)
+    lsum = p.sum(axis=-1)
     # §Perf it.2: probabilities in bf16 for the PV matmul (stats stay f32);
     # halves the dominant S²-sized HBM traffic of the jnp attention path.
     acc = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
-    return m, l, acc
+    return m, lsum, acc
 
 
 def _merge(m1, l1, a1, m2, l2, a2):
@@ -95,8 +94,9 @@ def flash_attention_jnp(q, k, v, spec: AttnSpec, *, bq: int = 1024,
         m0 = jnp.full((b, hkv, g, bq), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
         a0 = jnp.zeros((b, hkv, g, bq, d), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
-        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        (m, lsum, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+        return (acc / jnp.maximum(lsum, 1e-30)[..., None]).astype(q.dtype)
 
     out = jax.lax.map(q_block, jnp.arange(nq))           # (nq,B,Hkv,G,bq,D)
     out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, s_len, d)
@@ -120,8 +120,8 @@ def _windowed(qg, k, v, spec: AttnSpec, bq: int):
         kb = jax.lax.dynamic_slice_in_dim(k, start, span, axis=2)
         vb = jax.lax.dynamic_slice_in_dim(v, start, span, axis=2)
         kpos = start + jnp.arange(span)
-        m, l, acc = _block_attn(qb, kb, vb, qpos, kpos, spec)
-        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(qg.dtype)
+        m, lsum, acc = _block_attn(qb, kb, vb, qpos, kpos, spec)
+        return (acc / jnp.maximum(lsum, 1e-30)[..., None]).astype(qg.dtype)
 
     out = jax.lax.map(q_block, jnp.arange(nq))
     return jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, s_len, d)

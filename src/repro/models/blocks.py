@@ -12,7 +12,7 @@ Param declarations (Meta) live beside the compute so shapes cannot drift.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

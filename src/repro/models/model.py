@@ -13,8 +13,7 @@ Entry points (all pure):
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -36,7 +36,8 @@ def schedule(cfg: AdamWConfig, step):
 
 
 def init(cfg: AdamWConfig, params) -> Dict:
-    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, cfg.state_dtype)
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
             "step": jnp.zeros((), jnp.int32)}

@@ -1,14 +1,17 @@
-"""REAP runtime layer: plan caching, overlap pipelining, fault tolerance.
+"""REAP runtime layer: plan caching, persistence, overlap pipelining.
 
-``ReapRuntime`` (api.py) is the front end; plan_cache.py and pipeline.py are
-its mechanisms; elastic.py carries the fault-tolerance posture for the
-training/serving side of the repo.
+``ReapRuntime`` (api.py) is the front end; plan_cache.py, plan_store.py and
+pipeline.py are its mechanisms; elastic.py carries the fault-tolerance
+posture for the training/serving side of the repo.
 """
-from .api import ReapRuntime, RuntimeConfig, default_runtime  # noqa: F401
+from .api import (ReapRuntime, RuntimeConfig,  # noqa: F401
+                  configure_default_runtime, default_runtime)
 from .pipeline import (BlockChunk, BlockChunkSet,  # noqa: F401
-                       GatherChunkSet, OverlapStats,
+                       GatherChunkSet, OverlapStats, bucket_block_schedule,
                        build_block_chunkset, cholesky_execute_overlapped,
                        chunk_row_bounds, run_overlapped,
                        spgemm_block_chunked, spgemm_gather_chunked)
 from .plan_cache import (CacheStats, PlanCache, deserialize_plan,  # noqa: F401
                          serialize_plan)
+from .plan_store import (PlanStore, StoreStats, store_key,  # noqa: F401
+                         fingerprint_from_json, fingerprint_to_json)

@@ -46,7 +46,13 @@ from .plan_cache import PlanCache
 @dataclasses.dataclass
 class RuntimeConfig:
     """Knobs of the runtime; every field participates in plan fingerprints
-    that depend on it (tile/block/n_chunks)."""
+    that depend on it (tile/block/n_chunks).
+
+    ``store_dir`` attaches a persistent plan store (plan_store.PlanStore):
+    the manifest is consulted lazily on the first miss, and every newly
+    built plan is write-through-persisted, so a restarted process starts
+    warm for every pattern any previous run inspected.
+    """
 
     cache_entries: int = 64
     overlap: bool = True
@@ -55,6 +61,8 @@ class RuntimeConfig:
     block: int = 128
     use_pallas: bool = True
     moe_capacity_factor: float = 1.25
+    store_dir: Optional[str] = None
+    store_budget_bytes: int = 1 << 30
 
 
 class ReapRuntime:
@@ -65,9 +73,14 @@ class ReapRuntime:
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
         self.config = cfg
-        self.cache = PlanCache(cfg.cache_entries)
+        self.store = None
+        if cfg.store_dir is not None:
+            from .plan_store import PlanStore
+            self.store = PlanStore(cfg.store_dir, cfg.store_budget_bytes)
+        self.cache = PlanCache(cfg.cache_entries, store=self.store)
         # routing decisions are tiny strings; keep them out of the plan
-        # cache so they neither consume plan capacity nor skew hit stats
+        # cache (and off the store) so they neither consume plan capacity
+        # nor skew hit stats
         self._routes = PlanCache(capacity=max(256, 4 * cfg.cache_entries))
 
     # -- SpGEMM ------------------------------------------------------------
@@ -223,9 +236,12 @@ class ReapRuntime:
 
     def cache_stats(self) -> dict:
         s = self.cache.stats
-        return dict(entries=len(self.cache), capacity=self.cache.capacity,
-                    hits=s.hits, misses=s.misses, evictions=s.evictions,
-                    hit_rate=s.hit_rate)
+        out = dict(entries=len(self.cache), capacity=self.cache.capacity,
+                   hits=s.hits, misses=s.misses, evictions=s.evictions,
+                   store_hits=s.store_hits, hit_rate=s.hit_rate)
+        if self.store is not None:
+            out["store"] = self.store.summary()
+        return out
 
 
 _DEFAULT: Optional[ReapRuntime] = None
@@ -236,4 +252,17 @@ def default_runtime() -> ReapRuntime:
     global _DEFAULT
     if _DEFAULT is None:
         _DEFAULT = ReapRuntime()
+    return _DEFAULT
+
+
+def configure_default_runtime(config: Optional[RuntimeConfig] = None,
+                              **overrides) -> ReapRuntime:
+    """(Re)build the process-wide runtime — e.g. to attach a plan store.
+
+    ``launch/serve.py --plan-store DIR`` calls this before serving so every
+    component that reaches for ``default_runtime()`` shares one store-backed
+    cache and decode restarts start warm.
+    """
+    global _DEFAULT
+    _DEFAULT = ReapRuntime(config, **overrides)
     return _DEFAULT

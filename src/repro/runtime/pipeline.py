@@ -32,7 +32,7 @@ from repro.core.etree import CholeskyPlan
 from repro.core.formats import CSR
 from repro.core.inspector import (PatternFingerprint, SpGemmBlockPlan,
                                   SpGemmGatherPlan, inspect_spgemm_block,
-                                  inspect_spgemm_gather)
+                                  inspect_spgemm_gather, next_pow2)
 from repro.core.spgemm import (block_result_to_csr, _block_execute_jnp,
                                spgemm_gather_execute_chunk)
 
@@ -306,6 +306,52 @@ def _build_block_chunk(plan: SpGemmBlockPlan, out0: int, s: int, e: int
         a_sel, a_eblk, a_erow, a_ecol, b_sel, b_eblk, b_erow, b_ecol)
 
 
+def bucket_block_schedule(ch: BlockChunk) -> dict:
+    """Pow-2-bucketed executor operands for one block chunk (memoized).
+
+    Without bucketing every distinct chunk shape — pair count, operand tile
+    counts, output block count — is a fresh XLA compile, so a mixed-pattern
+    workload replaying persisted plans triggers a recompile storm.  This
+    pads all four executor dimensions to power-of-two buckets, mirroring
+    ``spgemm_gather_execute_chunk`` on the gather path: compiled shapes are
+    ``(pair_cap,)`` schedules over ``(a_cap, bs, bs)``/``(b_cap, bs, bs)``
+    operand tiles with ``out_cap + 1`` output tiles, O(log) distinct shapes
+    across any stream of chunks.
+
+    Dead schedule slots form one trailing ``is_first``/``is_last`` group
+    whose products (of real operand tiles, so indices stay in bounds)
+    accumulate into the dummy output tile at index ``out_cap``; callers
+    slice the result back to the chunk's true ``n_out_blocks``.  Memoized
+    as a plain attribute — pattern-pure, rebuilt after deserialization,
+    skipped by serialization.
+    """
+    cached = getattr(ch, "_bucketed", None)
+    if cached is not None:
+        return cached
+    n = ch.n_pairs
+    pair_cap = next_pow2(max(1, n))
+    out_cap = next_pow2(max(1, ch.n_out_blocks))
+    pad = pair_cap - n
+
+    def sched(arr, fill, pad_first=0, pad_last=0):
+        out = arr.astype(np.int32)
+        if pad:
+            tail = np.full(pad, fill, np.int32)
+            tail[0], tail[-1] = tail[0] + pad_first, tail[-1] + pad_last
+            out = np.concatenate([out, tail])
+        return out
+
+    cached = dict(a_id=sched(ch.a_id, 0), b_id=sched(ch.b_id, 0),
+                  out_id=sched(ch.out_id, out_cap),
+                  is_first=sched(ch.is_first, 0, pad_first=1),
+                  is_last=sched(ch.is_last, 0, pad_last=1),
+                  pair_cap=pair_cap, out_cap=out_cap,
+                  a_cap=next_pow2(max(1, ch.n_a_blocks)),
+                  b_cap=next_pow2(max(1, ch.n_b_blocks)))
+    ch._bucketed = cached
+    return cached
+
+
 def build_block_chunkset(plan: SpGemmBlockPlan, n_chunks: int,
                          lazy: bool = False) -> BlockChunkSet:
     """Split a block plan's pair schedule into ≤ n_chunks chunks.
@@ -374,29 +420,30 @@ def spgemm_block_chunked(a: CSR, b: CSR, block: int = 128, n_chunks: int = 4,
     bs = plan.block
 
     def inspect_fn(k: int):
+        # emit into pow-2-bucketed tile arrays (bucket_block_schedule) so
+        # the executor sees O(log) distinct shapes across a chunk stream
         ch = chunkset.chunk(k)
-        a_blocks = np.zeros((ch.n_a_blocks, bs, bs), np.float32)
+        sched = bucket_block_schedule(ch)
+        a_blocks = np.zeros((sched["a_cap"], bs, bs), np.float32)
         a_blocks[ch.a_eblk, ch.a_erow, ch.a_ecol] = a.data[ch.a_sel]
-        b_blocks = np.zeros((ch.n_b_blocks, bs, bs), np.float32)
+        b_blocks = np.zeros((sched["b_cap"], bs, bs), np.float32)
         b_blocks[ch.b_eblk, ch.b_erow, ch.b_ecol] = b.data[ch.b_sel]
-        return ch, a_blocks, b_blocks
+        return ch, sched, a_blocks, b_blocks
 
     def execute_fn(k: int, emitted) -> np.ndarray:
-        ch, a_blocks, b_blocks = emitted
+        ch, sched, a_blocks, b_blocks = emitted
+        n_out_cap = sched["out_cap"] + 1    # +1: dummy tile for dead slots
         if use_pallas:
             from repro.kernels import ops as kops
-            sched = {"a_id": ch.a_id.astype(np.int32),
-                     "b_id": ch.b_id.astype(np.int32),
-                     "out_id": ch.out_id.astype(np.int32),
-                     "is_first": ch.is_first.astype(np.int32),
-                     "is_last": ch.is_last.astype(np.int32)}
-            return np.asarray(kops.bsr_spgemm_schedule(
+            out = kops.bsr_spgemm_schedule(
                 sched, jnp.asarray(a_blocks), jnp.asarray(b_blocks),
-                n_out_blocks=ch.n_out_blocks))
-        return np.asarray(_block_execute_jnp(
-            jnp.asarray(a_blocks), jnp.asarray(b_blocks),
-            jnp.asarray(ch.a_id), jnp.asarray(ch.b_id),
-            jnp.asarray(ch.out_id), n_out=ch.n_out_blocks))
+                n_out_blocks=n_out_cap)
+        else:
+            out = _block_execute_jnp(
+                jnp.asarray(a_blocks), jnp.asarray(b_blocks),
+                jnp.asarray(sched["a_id"]), jnp.asarray(sched["b_id"]),
+                jnp.asarray(sched["out_id"]), n_out=n_out_cap)
+        return np.asarray(out)[:ch.n_out_blocks]
 
     results, ostats = run_overlapped(chunkset.n_chunks, inspect_fn,
                                      execute_fn, overlap)

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 from collections import OrderedDict
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict
 
 import numpy as np
 
@@ -34,11 +34,12 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    store_hits: int = 0      # misses answered by the persistent store
 
     @property
     def hit_rate(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
+        total = self.hits + self.store_hits + self.misses
+        return (self.hits + self.store_hits) / total if total else 0.0
 
 
 class PlanCache:
@@ -48,10 +49,17 @@ class PlanCache:
     hundred MB at most; an entry count keeps the policy simple and
     predictable for tests).  ``capacity <= 0`` disables caching entirely —
     every lookup is a miss and nothing is stored.
+
+    ``store`` optionally attaches a persistent ``plan_store.PlanStore``:
+    an in-memory miss falls back to disk (counted as ``stats.store_hits``)
+    and every ``put`` write-through-persists, so same-pattern work survives
+    process restarts.  The store is never consulted when caching is
+    disabled (``capacity <= 0``).
     """
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, store=None):
         self.capacity = capacity
+        self.store = store
         self.stats = CacheStats()
         self._entries: "OrderedDict[PatternFingerprint, object]" = OrderedDict()
         self._lock = threading.Lock()
@@ -63,24 +71,39 @@ class PlanCache:
         with self._lock:
             return fp in self._entries
 
+    def _insert_locked(self, fp: PatternFingerprint, plan) -> None:
+        self._entries[fp] = plan
+        self._entries.move_to_end(fp)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+
     def get(self, fp: PatternFingerprint):
         with self._lock:
             if fp in self._entries:
                 self._entries.move_to_end(fp)
                 self.stats.hits += 1
                 return self._entries[fp]
+        if self.store is not None and self.capacity > 0:
+            plan = self.store.get(fp)       # disk IO outside the cache lock
+            if plan is not None:
+                with self._lock:
+                    self.stats.store_hits += 1
+                    self._insert_locked(fp, plan)
+                return plan
+        with self._lock:
             self.stats.misses += 1
-            return None
+        return None
 
     def put(self, fp: PatternFingerprint, plan) -> None:
         if self.capacity <= 0:
             return
         with self._lock:
-            self._entries[fp] = plan
-            self._entries.move_to_end(fp)
-            while len(self._entries) > self.capacity:
-                self._entries.popitem(last=False)
-                self.stats.evictions += 1
+            self._insert_locked(fp, plan)
+        if self.store is not None:
+            # best-effort write-through; PlanStore.put swallows IO errors
+            # internally (stats.errors) so computation never fails on disk
+            self.store.put(fp, plan)
 
     def get_or_build(self, fp: PatternFingerprint, builder: Callable[[], object]):
         """Return (plan, hit).  ``builder`` runs outside the lock on a miss."""

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 from repro.configs import ARCHS, get_config, reduced_config
 from repro.models import (abstract_params, decode_step, forward, init_cache,
                           init_params, loss_fn)
-from repro.models.params import count_params
 
 
 def _batch_for(cfg, b=2, s=32):

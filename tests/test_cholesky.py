@@ -1,6 +1,5 @@
 """Sparse Cholesky: symbolic analysis + level-scheduled numeric executor."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """Property tests on model-level invariants (hypothesis + direct)."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 import jax

@@ -12,10 +12,10 @@ from repro.core import (CSR, COO, cholesky_values, inspect_cholesky,
                         inspect_spgemm_block, plan_to_dense_l, random_csr,
                         random_spd_csr, spgemm_ref_numpy)
 from repro.core.cholesky import cholesky_execute
-from repro.runtime import (ReapRuntime, build_block_chunkset,
-                           cholesky_execute_overlapped, chunk_row_bounds,
-                           run_overlapped, spgemm_block_chunked,
-                           spgemm_gather_chunked)
+from repro.runtime import (ReapRuntime, bucket_block_schedule,
+                           build_block_chunkset, cholesky_execute_overlapped,
+                           chunk_row_bounds, run_overlapped,
+                           spgemm_block_chunked, spgemm_gather_chunked)
 
 
 def _family(name: str, n: int, m: int, density: float, seed: int) -> CSR:
@@ -186,6 +186,80 @@ class TestChunkedBlockSpgemm:
                                    rtol=1e-3, atol=1e-3)
         _, stats2 = rt.spgemm(a, a, method="block")
         assert not stats["cache_hit"] and stats2["cache_hit"]
+
+
+class TestBlockChunkBucketing:
+    """Pow-2 shape bucketing of block-chunk executor operands: dead slots
+    must not change results, and distinct compiled shapes must collapse to
+    distinct bucket tuples (O(log), not one per raw chunk shape)."""
+
+    def test_bucketed_schedule_shape_and_flags(self):
+        a = _family("random", 100, 100, 0.06, 41)
+        plan = inspect_spgemm_block(a, a, 16)
+        chunkset = build_block_chunkset(plan, 3)
+        from repro.core.inspector import next_pow2
+        for k in range(chunkset.n_chunks):
+            ch = chunkset.chunk(k)
+            sched = bucket_block_schedule(ch)
+            cap = next_pow2(max(1, ch.n_pairs))
+            assert sched["pair_cap"] == cap
+            for key in ("a_id", "b_id", "out_id", "is_first", "is_last"):
+                assert sched[key].shape == (cap,)
+            assert sched["a_cap"] >= ch.n_a_blocks
+            assert sched["b_cap"] >= ch.n_b_blocks
+            assert sched["out_cap"] >= ch.n_out_blocks
+            # live prefix is untouched
+            np.testing.assert_array_equal(sched["out_id"][:ch.n_pairs],
+                                          ch.out_id)
+            pad = cap - ch.n_pairs
+            if pad:
+                # dead slots: one trailing group aimed at the dummy tile
+                tail = sched["out_id"][ch.n_pairs:]
+                assert (tail == sched["out_cap"]).all()
+                assert sched["is_first"][ch.n_pairs] == 1
+                assert sched["is_last"][-1] == 1
+                assert sched["is_first"][ch.n_pairs:].sum() == 1
+                assert sched["is_last"][ch.n_pairs:].sum() == 1
+            # memoized: second call returns the identical dict
+            assert bucket_block_schedule(ch) is sched
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_bucketed_execution_matches_reference(self, family):
+        # n chosen so chunk shapes are never powers of two already
+        a = _family(family, 118, 107, 0.06, 42)
+        b = _family(family, 107, 93, 0.06, 43)
+        c, _, _ = spgemm_block_chunked(a, b, block=16, n_chunks=3,
+                                       use_pallas=False)
+        np.testing.assert_allclose(c.to_dense().astype(np.float64),
+                                   spgemm_ref_numpy(a, b).to_dense(),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_mixed_patterns_bounded_compiles(self):
+        """Across mixed sizes the executor compiles at most one shape per
+        distinct bucket tuple."""
+        from repro.core.spgemm import _block_execute_jnp
+        rt = ReapRuntime(n_chunks=3, block=8, use_pallas=False)
+        mats = [_family("blockdiag", n, n, 0.1, 60 + n)
+                for n in (72, 80, 88, 96, 104)]
+        before = _block_execute_jnp._cache_size()
+        for m in mats:
+            c, _ = rt.spgemm(m, m, method="block")
+            np.testing.assert_allclose(c.to_dense().astype(np.float64),
+                                       spgemm_ref_numpy(m, m).to_dense(),
+                                       rtol=1e-3, atol=1e-3)
+        compiles = _block_execute_jnp._cache_size() - before
+        buckets, raw, chunks = set(), set(), 0
+        for plan in rt.cache._entries.values():
+            for k in range(plan.n_chunks):
+                ch = plan.chunk(k)
+                sched = bucket_block_schedule(ch)
+                buckets.add((sched["pair_cap"], sched["a_cap"],
+                             sched["b_cap"], sched["out_cap"]))
+                raw.add((ch.n_pairs, ch.n_a_blocks, ch.n_b_blocks,
+                         ch.n_out_blocks))
+                chunks += 1
+        assert compiles <= len(buckets) <= len(raw) <= chunks
+        assert len(buckets) < chunks        # bucketing actually collapsed
 
 
 def _spd_family(name: str, n: int, seed: int) -> CSR:

@@ -4,9 +4,8 @@ import pytest
 
 from repro.core import inspect_cholesky, random_csr
 from repro.core.formats import random_spd_csr
-from repro.core.simulator import (REAP_32, REAP_64, REAP_128, REAP_32C,
-                                  REAP_64C, simulate_cholesky_cpu,
-                                  simulate_cholesky_reap,
+from repro.core.simulator import (REAP_32, REAP_64, REAP_32C,
+                                  REAP_64C, simulate_cholesky_reap,
                                   simulate_spgemm_cpu, simulate_spgemm_reap,
                                   spgemm_workload, cpu_cost_per_pp)
 

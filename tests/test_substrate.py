@@ -1,6 +1,4 @@
 """Tests for data pipeline, optimizer, checkpointing, and the FT runtime."""
-import os
-
 import numpy as np
 import pytest
 

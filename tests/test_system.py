@@ -4,7 +4,6 @@ Covers: training reduces loss; checkpoint/resume is bit-deterministic
 (fault-tolerance contract); serving produces coherent batched generations.
 """
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
