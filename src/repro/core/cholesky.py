@@ -160,3 +160,48 @@ def cholesky_baseline_numpy(plan: CholeskyPlan, a_vals: np.ndarray
         off = _ranges(starts, counts)
         vals[off] /= vals[plan.diag_pos[col_of_slot[off]]]
     return vals[:plan.nnz], time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# Op registry: sparse Cholesky as a planned op (runtime.ops protocol)
+# ---------------------------------------------------------------------------
+#
+# One fingerprint per pattern (dtype is a value-level choice and stays out
+# of the key); `overlap` picks the executor — the etree level schedule is
+# the chunk stream, so overlapping lives inside execute_sync rather than a
+# separate chunked hook.
+
+from .inspector import fingerprint_pattern  # noqa: E402
+from repro.runtime.ops import OpSpec, register_op  # noqa: E402
+
+
+def _fp_cholesky(operands, cfg, *, chunked, **kw):
+    (a,) = operands
+    return fingerprint_pattern("cholesky", (a,))
+
+
+def _inspect_cholesky(operands, cfg, fp, **kw):
+    (a,) = operands
+    return inspect_cholesky(a, fp)
+
+
+def _exec_cholesky(plan, operands, cfg, *, overlap, dtype=jnp.float64, **kw):
+    (a,) = operands
+    if overlap:
+        from repro.runtime.pipeline import cholesky_execute_overlapped
+        vals, stats = cholesky_execute_overlapped(plan, plan.a_values(a),
+                                                  dtype, overlap=True)
+    else:
+        _, vals, stats = cholesky(a, dtype, plan=plan)
+        stats["overlap"] = False
+    return (plan, vals), stats
+
+
+register_op(OpSpec(
+    tag="cholesky",
+    fingerprint=_fp_cholesky,
+    inspect=_inspect_cholesky,
+    execute_sync=_exec_cholesky,
+    plan_types={"cholesky": CholeskyPlan},
+    allowed_kw=("dtype",),
+))

@@ -436,3 +436,57 @@ def choose_spgemm_path(a: CSR, b: CSR, block: int = 128,
     """
     a_pat = bsr_pattern_from_csr(a, block)
     return "block" if a_pat.fill >= fill_threshold else "gather"
+
+
+# ---------------------------------------------------------------------------
+# Op registry: MoE dispatch as a planned op (runtime.ops protocol)
+# ---------------------------------------------------------------------------
+#
+# Operands are ``(tokens, expert_ids)``; only the routing *pattern* (the
+# token→expert assignment as a CSR) and the capacity enter the fingerprint —
+# tokens and gates are values.  A warm plan turns dispatch into two gathers.
+
+from repro.runtime.ops import OpSpec, register_op  # noqa: E402
+
+
+def _prepare_moe_dispatch(operands, cfg, *, n_experts: int, capacity=None,
+                          **kw):
+    """Derive the routing CSR and resolved capacity once per dispatch —
+    shared by the fingerprint and (on a miss) the inspect hook."""
+    if capacity is None:
+        from repro.models.moe import expert_capacity
+        t, k = np.asarray(operands[1]).shape
+        capacity = expert_capacity(t, n_experts, k, cfg.moe_capacity_factor)
+    return dict(kw, n_experts=n_experts, capacity=int(capacity),
+                routing=routing_csr(np.asarray(operands[1]), n_experts))
+
+
+def _fp_moe_dispatch(operands, cfg, *, chunked, routing, capacity, **kw):
+    return fingerprint_pattern("moe_dispatch", (routing,), capacity=capacity)
+
+
+def _inspect_moe_dispatch(operands, cfg, fp, *, routing, capacity, **kw):
+    return inspect_moe_dispatch(routing, capacity, fp)
+
+
+def _exec_moe_dispatch(plan: MoeDispatchPlan, operands, cfg, *, overlap,
+                       **kw):
+    import time
+    tokens = np.asarray(operands[0])
+    t0 = time.perf_counter()
+    x_bundles = plan.bundle(tokens)
+    bundle_s = time.perf_counter() - t0
+    stats = dict(method="moe_dispatch", bundle_s=bundle_s,
+                 capacity=plan.capacity, dropped=plan.dropped_frac)
+    return (x_bundles, plan), stats
+
+
+register_op(OpSpec(
+    tag="moe_dispatch",
+    prepare=_prepare_moe_dispatch,
+    fingerprint=_fp_moe_dispatch,
+    inspect=_inspect_moe_dispatch,
+    execute_sync=_exec_moe_dispatch,
+    plan_types={"moe_dispatch": MoeDispatchPlan},
+    allowed_kw=("n_experts", "capacity"),
+))

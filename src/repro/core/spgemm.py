@@ -27,8 +27,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .formats import CSR
+from .formats import BsrPattern, CSR
 from .inspector import (SpGemmBlockPlan, SpGemmGatherPlan, choose_spgemm_path,
+                        csr_pattern_digest, fingerprint_pattern,
                         inspect_spgemm_block, inspect_spgemm_gather, next_pow2)
 
 
@@ -234,3 +235,127 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", block: int = 128,
                      n_pairs=plan.n_pairs, fill=plan.a_pat.fill)
         return c, stats
     raise TypeError(f"unsupported plan type {type(plan).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Op registry: SpGEMM as planned ops (runtime.ops protocol)
+# ---------------------------------------------------------------------------
+#
+# "spgemm" is a pure router: it resolves method="auto" (caching the
+# heuristic's decision per pattern in the runtime's route cache) and
+# forwards to the concrete "spgemm_gather" / "spgemm_block" ops.  The
+# concrete specs keep the exact fingerprint op strings and params the
+# runtime has always used, so persisted stores stay warm across this
+# refactor.
+
+from repro.runtime.ops import OpSpec, register_op  # noqa: E402
+
+
+def _spgemm_digests(a: CSR, b: CSR, digests):
+    # each operand pattern is hashed exactly once per call; the routing key
+    # and the plan key share these digests
+    return digests if digests is not None else (csr_pattern_digest(a),
+                                                csr_pattern_digest(b))
+
+
+def _route_spgemm(operands, cfg, routes, *, method: str = "auto",
+                  digests=None, **kw):
+    a, b = operands
+    digests = _spgemm_digests(a, b, digests)
+    if method == "auto":
+        # the routing heuristic builds A's block structure (O(nnz log nnz));
+        # cache the decision per pattern like any other plan
+        route_fp = fingerprint_pattern("route", (a, b), digests,
+                                       block=cfg.block)
+        method, _ = routes.get_or_build(
+            route_fp, lambda: choose_spgemm_path(a, b, cfg.block))
+    if method not in ("gather", "block"):
+        raise ValueError(f"unknown method {method!r}")
+    return f"spgemm_{method}", dict(kw, digests=digests)
+
+
+def _fp_spgemm_gather(operands, cfg, *, chunked, digests=None, **kw):
+    a, b = operands
+    digests = _spgemm_digests(a, b, digests)
+    if chunked:
+        return fingerprint_pattern("spgemm_gather_chunked", (a, b), digests,
+                                   tile=cfg.tile, n_chunks=cfg.n_chunks)
+    return fingerprint_pattern("spgemm_gather", (a, b), digests,
+                               tile=cfg.tile)
+
+
+def _inspect_spgemm_gather(operands, cfg, fp, **kw):
+    a, b = operands
+    return inspect_spgemm_gather(a, b, cfg.tile, fp)
+
+
+def _exec_spgemm_gather(plan, operands, cfg, *, overlap, **kw):
+    a, b = operands
+    c, stats = spgemm(a, b, plan=plan)
+    stats["overlap"] = False
+    return c, stats
+
+
+def _exec_spgemm_gather_chunked(cached, operands, cfg, *, overlap, **kw):
+    from repro.runtime.pipeline import spgemm_gather_chunked
+    a, b = operands
+    c, stats, chunkset = spgemm_gather_chunked(
+        a, b, n_chunks=cfg.n_chunks, tile=cfg.tile, overlap=overlap,
+        chunkset=cached)
+    return c, stats, chunkset
+
+
+def _fp_spgemm_block(operands, cfg, *, chunked, digests=None, **kw):
+    a, b = operands
+    digests = _spgemm_digests(a, b, digests)
+    if chunked:
+        return fingerprint_pattern("spgemm_block_chunked", (a, b), digests,
+                                   block=cfg.block, n_chunks=cfg.n_chunks)
+    return fingerprint_pattern("spgemm_block", (a, b), digests,
+                               block=cfg.block)
+
+
+def _inspect_spgemm_block(operands, cfg, fp, **kw):
+    a, b = operands
+    return inspect_spgemm_block(a, b, cfg.block, fp)
+
+
+def _exec_spgemm_block(plan, operands, cfg, *, overlap, **kw):
+    a, b = operands
+    c, stats = spgemm(a, b, plan=plan, use_pallas=cfg.use_pallas)
+    stats["overlap"] = False
+    return c, stats
+
+
+def _exec_spgemm_block_chunked(cached, operands, cfg, *, overlap, **kw):
+    from repro.runtime.pipeline import spgemm_block_chunked
+    a, b = operands
+    c, stats, chunkset = spgemm_block_chunked(
+        a, b, block=cfg.block, n_chunks=cfg.n_chunks, overlap=overlap,
+        use_pallas=cfg.use_pallas, chunkset=cached)
+    return c, stats, chunkset
+
+
+register_op(OpSpec(tag="spgemm", route=_route_spgemm))
+
+register_op(OpSpec(
+    tag="spgemm_gather",
+    fingerprint=_fp_spgemm_gather,
+    inspect=_inspect_spgemm_gather,
+    execute_sync=_exec_spgemm_gather,
+    execute_chunked=_exec_spgemm_gather_chunked,
+    plan_types={"spgemm_gather": SpGemmGatherPlan},
+    fingerprint_ops=("spgemm_gather", "spgemm_gather_chunked"),
+    allowed_kw=("digests",),
+))
+
+register_op(OpSpec(
+    tag="spgemm_block",
+    fingerprint=_fp_spgemm_block,
+    inspect=_inspect_spgemm_block,
+    execute_sync=_exec_spgemm_block,
+    execute_chunked=_exec_spgemm_block_chunked,
+    plan_types={"spgemm_block": SpGemmBlockPlan, "bsr_pattern": BsrPattern},
+    fingerprint_ops=("spgemm_block", "spgemm_block_chunked"),
+    allowed_kw=("digests",),
+))

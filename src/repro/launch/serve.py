@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
         --batch 4 --prompt-len 32 --gen 32
+
+MoE architectures can route decode-step expert dispatch through the
+process's shared ReapRuntime (``--host-moe``): each decode step's routing
+pattern goes through the registered ``moe_dispatch`` op, so repeated
+routings hit warm bundling plans and — with ``--plan-store`` — server
+restarts reuse the plans a previous process inspected.
 """
 from __future__ import annotations
 
@@ -17,14 +23,24 @@ from repro.models import model as M
 
 
 def generate(cfg, params, tokens, *, gen: int, max_seq: int,
-             temperature: float = 0.0, seed: int = 0, frames=None):
-    """Greedy/temperature sampling. tokens: (B, prompt_len) int32."""
+             temperature: float = 0.0, seed: int = 0, frames=None,
+             host_moe: bool = False):
+    """Greedy/temperature sampling. tokens: (B, prompt_len) int32.
+
+    ``host_moe`` runs decode steps eagerly (un-jitted) so MoE layers see
+    concrete arrays and route dispatch through the installed runtime (see
+    ``models.moe.set_host_dispatch_runtime``); prefill stays jitted — its
+    traced MoE keeps the in-graph path.
+    """
+    def decode_fn(p, c, t, pos):
+        return M.decode_step(cfg, p, c, t, pos)
+
     b, prompt_len = tokens.shape
     if cfg.enc_dec:
         cache = M.init_cache(cfg, b, max_seq, s_enc=frames.shape[1])
         _, cache = M.encdec_prefill(cfg, params, frames, cache)
         # consume the prompt token by token (decoder side)
-        decode = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+        decode = decode_fn if host_moe else jax.jit(decode_fn)
         logits = None
         for i in range(prompt_len):
             logits, cache = decode(params, cache, tokens[:, i:i + 1],
@@ -34,7 +50,7 @@ def generate(cfg, params, tokens, *, gen: int, max_seq: int,
         prefill = jax.jit(lambda p, t, c: M.prefill(cfg, p, t, c))
         logits, cache = prefill(params, tokens, cache)
         logits = logits[:, -1:]
-        decode = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+        decode = decode_fn if host_moe else jax.jit(decode_fn)
 
     key = jax.random.PRNGKey(seed)
     out = [tokens]
@@ -60,6 +76,21 @@ def generate(cfg, params, tokens, *, gen: int, max_seq: int,
     return jnp.concatenate(out, axis=1), lat
 
 
+def _store_op_report(rt) -> str:
+    """Warm-plan counts per registered op tag (registry-enumerated).
+
+    Chunked fingerprints ("spgemm_gather_chunked") attribute to the
+    registry op that owns them ("spgemm_gather") via the specs'
+    ``fingerprint_ops`` declarations."""
+    from repro.runtime.ops import op_tag_for_fingerprint
+    counts: dict = {}
+    for fp in rt.store.fingerprints():
+        tag = op_tag_for_fingerprint(fp.op) or "other"
+        counts[tag] = counts.get(tag, 0) + 1
+    parts = [f"{tag}={n}" for tag, n in sorted(counts.items())]
+    return " ".join(parts) if parts else "none"
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, default="gemma2-2b")
@@ -72,26 +103,49 @@ def main(argv=None):
     ap.add_argument("--plan-store", default=None, metavar="DIR",
                     help="attach a persistent plan store to this process's "
                          "shared ReapRuntime (repro.runtime.default_runtime)"
-                         ": any component routing sparse ops through it "
+                         ": every registered sparse op routed through it "
                          "loads warm inspector plans across restarts and "
-                         "write-through-persists new ones.  The jitted "
-                         "prefill/decode path routes its MoE dispatch "
-                         "in-graph and does not consult the runtime yet "
-                         "(see ROADMAP), so with a plain LM arch this "
-                         "currently only wires and reports the store")
+                         "write-through-persists new ones.  Combine with "
+                         "--host-moe on an MoE arch so decode-step expert "
+                         "dispatch actually routes through the runtime")
+    ap.add_argument("--host-moe", action="store_true",
+                    help="route decode-step MoE dispatch through the "
+                         "runtime's registered moe_dispatch op (decode "
+                         "runs eagerly; prefill stays jitted in-graph). "
+                         "Repeated routings hit warm bundling plans; with "
+                         "--plan-store they survive restarts")
     args = ap.parse_args(argv)
 
     rt = None
-    if args.plan_store:
+    if args.plan_store or args.host_moe:
         from repro.runtime import configure_default_runtime
         rt = configure_default_runtime(store_dir=args.plan_store)
-        s = rt.store.summary()
-        print(f"[serve] plan store {args.plan_store}: {s['entries']} warm "
-              f"plans, {s['bytes'] / 1e6:.2f} MB on disk")
+        if rt.store is not None:
+            s = rt.store.summary()
+            print(f"[serve] plan store {args.plan_store}: {s['entries']} "
+                  f"warm plans ({_store_op_report(rt)}), "
+                  f"{s['bytes'] / 1e6:.2f} MB on disk")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_config(cfg)
+    host_moe = args.host_moe
+    if host_moe:
+        if cfg.ffn != "moe":
+            # no MoE layers → nothing to route; keep decode jitted rather
+            # than silently paying eager per-token dispatch for nothing
+            print(f"[serve] note: --host-moe has no effect on {args.arch} "
+                  "(no MoE layers); decode stays jitted")
+            host_moe = False
+        elif cfg.scan_layers:
+            # lax.scan traces its body even outside jit, which would hide
+            # concrete activations from the host router; unroll the layer
+            # loop so eager decode steps reach the runtime
+            import dataclasses
+            cfg = dataclasses.replace(cfg, scan_layers=False)
+    if host_moe:
+        from repro.models.moe import set_host_dispatch_runtime
+        set_host_dispatch_runtime(rt)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
     tokens = jnp.asarray(rng.integers(0, cfg.vocab_size,
@@ -105,7 +159,7 @@ def main(argv=None):
     t0 = time.time()
     seqs, lat = generate(cfg, params, tokens, gen=args.gen, max_seq=max_seq,
                          temperature=args.temperature, seed=args.seed,
-                         frames=frames)
+                         frames=frames, host_moe=host_moe)
     total = time.time() - t0
     print(f"[serve] {args.batch} seqs × {args.gen} new tokens in {total:.2f}s"
           f" ({args.batch * args.gen / total:.1f} tok/s)")
@@ -113,16 +167,27 @@ def main(argv=None):
         print(f"[serve] decode latency p50={np.median(lat) * 1e3:.1f}ms "
               f"p99={np.percentile(lat, 99) * 1e3:.1f}ms")
     print("[serve] first sequence:", np.asarray(seqs[0])[:16], "...")
+    if host_moe:
+        from repro.models.moe import set_host_dispatch_runtime
+        set_host_dispatch_runtime(None)
     if rt is not None:
         cs = rt.cache_stats()
-        print(f"[serve] plan cache: {cs['hits']} hits, "
-              f"{cs['store_hits']} store hits, {cs['misses']} misses; "
-              f"store holds {cs['store']['entries']} plans "
-              f"({cs['store']['saves']} saved this run)")
-        if cs["hits"] + cs["store_hits"] + cs["misses"] == 0:
+        line = (f"[serve] plan cache: {cs['hits']} hits, "
+                f"{cs['store_hits']} store hits, {cs['misses']} misses")
+        if rt.store is not None:
+            line += (f"; store holds {cs['store']['entries']} plans "
+                     f"({cs['store']['saves']} saved this run)")
+        print(line)
+        active = {tag: rec for tag, rec in cs["per_op"].items()
+                  if any(rec.values())}
+        if active:
+            print("[serve] per-op:", " ".join(
+                f"{tag}[h={rec['hits']},s={rec['store_hits']},"
+                f"m={rec['misses']}]" for tag, rec in sorted(active.items())))
+        elif rt.store is not None:
             print("[serve] note: no sparse op consulted the runtime this "
-                  "run — the jitted decode path routes in-graph; the store "
-                  "serves runtime-routed callers (see --plan-store help)")
+                  "run — the jitted decode path routes in-graph; pass "
+                  "--host-moe on an MoE arch to route dispatch through it")
     return seqs
 
 

@@ -45,6 +45,54 @@ def host_route(tokens, router_w, *, top_k: int
     return expert.astype(np.int64), gate.astype(np.float32)
 
 
+# -- Host-routed dispatch through the op registry ---------------------------
+#
+# launch/serve.py --host-moe installs the process's ReapRuntime here; eager
+# (non-traced) moe_ffn calls then route their dispatch through the
+# registered ``moe_dispatch`` op, so decode steps share warm bundling plans
+# and — with --plan-store — reuse them across server restarts.  Traced
+# calls (jitted prefill/train) keep the in-graph path: a tracer can't leave
+# the graph for a host-side plan cache.
+
+_HOST_DISPATCH_RT = None
+
+
+def set_host_dispatch_runtime(rt) -> None:
+    """Install (or with ``None`` remove) the runtime eager ``moe_ffn``
+    calls route their dispatch through."""
+    global _HOST_DISPATCH_RT
+    _HOST_DISPATCH_RT = rt
+
+
+def _moe_ffn_host(x, p, *, n_experts: int, top_k: int,
+                  capacity_factor: float):
+    """Eager MoE FFN with registry-routed dispatch (serving path).
+
+    Routing runs on the host (``host_route``), the assignment pattern goes
+    through ``ReapRuntime.run("moe_dispatch", ...)`` — plan-cached and
+    store-persisted like every registered op — and the expert SwiGLU runs
+    on the bundled activations.  Aux loss is reported as 0 (it only
+    matters in training, where the traced in-graph path runs).
+    """
+    rt = _HOST_DISPATCH_RT
+    b, s, d = x.shape
+    tokens = np.asarray(x, np.float32).reshape(b * s, d)
+    expert_ids, gates = host_route(tokens, np.asarray(p["router"]),
+                                  top_k=top_k)
+    cap = expert_capacity(b * s, n_experts, top_k, capacity_factor)
+    x_bundles, plan, _ = rt.moe_dispatch(tokens, expert_ids,
+                                         n_experts=n_experts, capacity=cap)
+    y = expert_swiglu(jnp.asarray(x_bundles, jnp.float32),
+                      p["w_gate"], p["w_up"], p["w_down"])
+    out = plan.combine(np.asarray(y), gates)
+    out = jnp.asarray(out, x.dtype).reshape(b, s, d)
+    if "shared_gate" in p:                                   # shared experts
+        from .layers import swiglu
+        out = out + swiglu(x.reshape(b * s, d), p["shared_gate"],
+                           p["shared_up"], p["shared_down"]).reshape(b, s, d)
+    return out, jnp.zeros((), jnp.float32)
+
+
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
@@ -174,6 +222,11 @@ def moe_ffn(x, p, *, n_experts: int, top_k: int, capacity_factor: float
     import functools
 
     from repro.parallel.api import constrain
+    if _HOST_DISPATCH_RT is not None and not isinstance(x, jax.core.Tracer):
+        # eager serving call with a runtime installed: dispatch through the
+        # registered moe_dispatch op (plan-cached, store-persisted)
+        return _moe_ffn_host(x, p, n_experts=n_experts, top_k=top_k,
+                             capacity_factor=capacity_factor)
     b, s, d = x.shape
     # decode (s == 1): per-row bundling degenerates (capacity 8 per single
     # token); bundle across the batch instead — the sort is over B·k

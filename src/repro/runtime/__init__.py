@@ -1,11 +1,14 @@
-"""REAP runtime layer: plan caching, persistence, overlap pipelining.
+"""REAP runtime layer: op registry, plan caching, persistence, overlap.
 
-``ReapRuntime`` (api.py) is the front end; plan_cache.py, plan_store.py and
-pipeline.py are its mechanisms; elastic.py carries the fault-tolerance
-posture for the training/serving side of the repo.
+``ReapRuntime`` (api.py) is a generic dispatcher over the registered
+planned-op protocol (ops.py); plan_cache.py, plan_store.py and pipeline.py
+are its mechanisms; elastic.py carries the fault-tolerance posture for the
+training/serving side of the repo.
 """
 from .api import (ReapRuntime, RuntimeConfig,  # noqa: F401
                   configure_default_runtime, default_runtime)
+from .ops import (OpSpec, get_op, list_ops,  # noqa: F401
+                  register_op, register_plan_type, unregister_op)
 from .pipeline import (BlockChunk, BlockChunkSet,  # noqa: F401
                        GatherChunkSet, OverlapStats, bucket_block_schedule,
                        build_block_chunkset, cholesky_execute_overlapped,

@@ -1,45 +1,38 @@
-"""ReapRuntime: plan-cached, overlap-pipelined inspector-executor front end.
+"""ReapRuntime: a generic dispatcher over the registered planned-op protocol.
 
-This is the layer a repeated-pattern workload (iterative solver, MoE
-dispatch, the Fig-10 sweep) should call instead of ``core.spgemm.spgemm`` /
-``core.cholesky.cholesky``:
+Every sparse operation in this repo factors into the same stages — pattern
+fingerprint, plan build (cache miss only), bundle emit + execution, with
+host/device overlap when the schedule is chunkable.  The runtime no longer
+hand-writes that choreography once per op: each op is an ``OpSpec``
+registered in ``runtime.ops`` (next to its kernel), and
 
-  * every call fingerprints the operand *patterns* (stage 1),
-  * plan-build (stage 2) runs only on a cache miss,
-  * bundle-emit + execution (stage 3) run through runtime.pipeline with
-    host/device overlap when the schedule is chunkable.
+    result, stats = ReapRuntime().run(op_tag, *operands, **kw)
+
+drives *any* registered op through one fingerprint → cache-lookup →
+inspect → execute → stats path.  ``spgemm`` / ``cholesky`` /
+``moe_dispatch`` remain as thin back-compat wrappers over ``run(...)``;
+admitting a brand-new op (see ``kernels/bsr_spmm.py`` for SpMM) touches no
+code here.
 
 Same pattern + different values ⇒ cache hit ⇒ the inspector cost from the
-paper's Fig 7 split drops out of the steady state entirely.
-
-The runtime owns no executor of its own: cached plans are handed to the
-*same* planned-execution entry points the library exposes —
-``core.spgemm.spgemm(plan=...)`` / ``core.cholesky.cholesky(plan=...)`` for
-synchronous calls, ``runtime.pipeline`` for chunk-overlapped ones — so the
-"library" and "runtime" halves of the codebase share one execute+stats path
-(see docs/architecture.md).
+paper's Fig 7 split drops out of the steady state entirely.  The runtime
+owns no executor of its own: specs hand cached plans to the same planned
+entry points the library exposes (``core.spgemm.spgemm(plan=...)``,
+``core.cholesky.cholesky(plan=...)``, ``runtime.pipeline``), so the
+"library" and "runtime" halves share one execute+stats path (see
+docs/architecture.md "Op registry").
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cholesky import cholesky as planned_cholesky
-from repro.core.etree import CholeskyPlan, inspect_cholesky
-from repro.core.formats import CSR
-from repro.core.inspector import (MoeDispatchPlan, choose_spgemm_path,
-                                  csr_pattern_digest, fingerprint_pattern,
-                                  inspect_moe_dispatch, inspect_spgemm_block,
-                                  inspect_spgemm_gather, routing_csr)
-from repro.core.spgemm import spgemm as planned_spgemm
-
-from .pipeline import (BlockChunkSet, GatherChunkSet,
-                       cholesky_execute_overlapped, spgemm_block_chunked,
-                       spgemm_gather_chunked)
+from . import ops as _ops
 from .plan_cache import PlanCache
 
 
@@ -65,6 +58,11 @@ class RuntimeConfig:
     store_budget_bytes: int = 1 << 30
 
 
+# route decisions are tiny per-pattern strings; anything bigger in the
+# route cache is a bug (a plan put under a route key), so puts are guarded
+_ROUTE_ENTRY_BYTES = 4096
+
+
 class ReapRuntime:
     """Cached + overlapped REAP runtime (one instance per worker/process)."""
 
@@ -81,122 +79,106 @@ class ReapRuntime:
         # routing decisions are tiny strings; keep them out of the plan
         # cache (and off the store) so they neither consume plan capacity
         # nor skew hit stats
-        self._routes = PlanCache(capacity=max(256, 4 * cfg.cache_entries))
+        self._routes = PlanCache(capacity=max(256, 4 * cfg.cache_entries),
+                                 max_entry_bytes=_ROUTE_ENTRY_BYTES)
+        self._op_stats: Dict[str, Dict[str, int]] = {}
+        self._op_stats_lock = threading.Lock()
+        # cache.clear() resets the per-op split too, so the aggregate and
+        # per-op views of cache_stats() can never contradict each other
+        self.cache.on_clear = self._reset_op_stats
 
-    # -- SpGEMM ------------------------------------------------------------
+    def _reset_op_stats(self) -> None:
+        with self._op_stats_lock:
+            self._op_stats.clear()
 
-    def spgemm(self, a: CSR, b: CSR, method: str = "auto",
-               overlap: Optional[bool] = None) -> Tuple[CSR, dict]:
-        """C = A @ B through the plan cache, overlapped when chunkable."""
+    # -- Generic dispatch --------------------------------------------------
+
+    def run(self, op_tag: str, *operands, overlap: Optional[bool] = None,
+            **kw) -> Tuple[object, dict]:
+        """Execute a registered planned op through the cache/pipeline.
+
+        Returns ``(result, stats)``; ``result`` is op-defined (the
+        back-compat wrappers unpack it).  ``stats`` always carries
+        ``cache_hit`` and ``fingerprint``; synchronous calls also get
+        ``inspect_s`` (plan acquisition time — ≈ digest cost when warm).
+        """
+        spec = _ops.get_op(op_tag)
+        hops = 0
+        while spec.route is not None:          # resolve router/alias ops
+            op_tag, kw = spec.route(operands, self.config, self._routes,
+                                    **kw)
+            spec = _ops.get_op(op_tag)
+            hops += 1
+            if hops > 4:
+                raise RuntimeError(f"op route loop resolving {op_tag!r}")
         cfg = self.config
+        if spec.allowed_kw is not None:
+            unknown = set(kw) - set(spec.allowed_kw)
+            if unknown:
+                raise TypeError(
+                    f"op {op_tag!r} got unexpected keyword arguments "
+                    f"{sorted(unknown)}; accepts {sorted(spec.allowed_kw)}")
         overlap = cfg.overlap if overlap is None else overlap
-        # each operand pattern is hashed exactly once per call; the routing
-        # key and the plan key below both reuse these digests
-        digests = (csr_pattern_digest(a), csr_pattern_digest(b))
-        if method == "auto":
-            # the routing heuristic builds A's block structure (O(nnz log
-            # nnz)); cache the decision per pattern like any other plan
-            route_fp = fingerprint_pattern("route", (a, b), digests,
-                                           block=cfg.block)
-            method, _ = self._routes.get_or_build(
-                route_fp, lambda: choose_spgemm_path(a, b, cfg.block))
+        chunked = spec.execute_chunked is not None and cfg.n_chunks > 1
+        if spec.prepare is not None:    # derive once what fingerprint +
+            kw = spec.prepare(operands, cfg, **kw)   # inspect both need
+        fp = spec.fingerprint(operands, cfg, chunked=chunked, **kw)
 
-        if method == "gather":
-            if cfg.n_chunks > 1:
-                return self._spgemm_gather_chunked(a, b, overlap, digests)
-            return self._spgemm_gather_sync(a, b, digests)
-        if method == "block":
-            if cfg.n_chunks > 1:
-                return self._spgemm_block_chunked(a, b, overlap, digests)
-            return self._spgemm_block_sync(a, b, digests)
-        raise ValueError(f"unknown method {method!r}")
-
-    def _spgemm_gather_chunked(self, a: CSR, b: CSR, overlap: bool,
-                               digests) -> Tuple[CSR, dict]:
-        cfg = self.config
-        fp = fingerprint_pattern("spgemm_gather_chunked", (a, b), digests,
-                                 tile=cfg.tile, n_chunks=cfg.n_chunks)
-        cached: Optional[GatherChunkSet] = self.cache.get(fp)
-        c, stats, chunkset = spgemm_gather_chunked(
-            a, b, n_chunks=cfg.n_chunks, tile=cfg.tile, overlap=overlap,
-            chunkset=cached)
-        if cached is None:
-            chunkset.fingerprint = fp
-            self.cache.put(fp, chunkset)
-        stats.update(cache_hit=cached is not None, fingerprint=fp.digest)
-        return c, stats
-
-    def _spgemm_gather_sync(self, a: CSR, b: CSR, digests
-                            ) -> Tuple[CSR, dict]:
-        cfg = self.config
-        fp = fingerprint_pattern("spgemm_gather", (a, b), digests,
-                                 tile=cfg.tile)
-        t0 = time.perf_counter()
-        plan, hit = self.cache.get_or_build(
-            fp, lambda: inspect_spgemm_gather(a, b, cfg.tile, fp))
-        inspect_s = time.perf_counter() - t0
-        c, stats = planned_spgemm(a, b, plan=plan)
-        stats.update(cache_hit=hit, inspect_s=inspect_s, overlap=False,
-                     fingerprint=fp.digest)
-        return c, stats
-
-    def _spgemm_block_chunked(self, a: CSR, b: CSR, overlap: bool,
-                              digests) -> Tuple[CSR, dict]:
-        cfg = self.config
-        fp = fingerprint_pattern("spgemm_block_chunked", (a, b), digests,
-                                 block=cfg.block, n_chunks=cfg.n_chunks)
-        cached: Optional[BlockChunkSet] = self.cache.get(fp)
-        c, stats, chunkset = spgemm_block_chunked(
-            a, b, block=cfg.block, n_chunks=cfg.n_chunks, overlap=overlap,
-            use_pallas=cfg.use_pallas, chunkset=cached)
-        if cached is None:
-            chunkset.fingerprint = fp
-            self.cache.put(fp, chunkset)
-        stats.update(cache_hit=cached is not None, fingerprint=fp.digest)
-        return c, stats
-
-    def _spgemm_block_sync(self, a: CSR, b: CSR, digests
-                           ) -> Tuple[CSR, dict]:
-        cfg = self.config
-        fp = fingerprint_pattern("spgemm_block", (a, b), digests,
-                                 block=cfg.block)
-        t0 = time.perf_counter()
-        plan, hit = self.cache.get_or_build(
-            fp, lambda: inspect_spgemm_block(a, b, cfg.block, fp))
-        inspect_s = time.perf_counter() - t0
-        c, stats = planned_spgemm(a, b, plan=plan, use_pallas=cfg.use_pallas)
-        stats.update(cache_hit=hit, inspect_s=inspect_s, overlap=False,
-                     fingerprint=fp.digest)
-        return c, stats
-
-    # -- Cholesky ----------------------------------------------------------
-
-    def cholesky(self, a: CSR, dtype=jnp.float64,
-                 overlap: Optional[bool] = None
-                 ) -> Tuple[CholeskyPlan, np.ndarray, dict]:
-        """A = L Lᵀ through the plan cache; level-bundle emission overlaps
-        device execution (the etree schedule is the chunk stream)."""
-        cfg = self.config
-        overlap = cfg.overlap if overlap is None else overlap
-        fp = fingerprint_pattern("cholesky", (a,))
-        t0 = time.perf_counter()
-        plan, hit = self.cache.get_or_build(
-            fp, lambda: inspect_cholesky(a, fp))
-        inspect_s = time.perf_counter() - t0
-        if overlap:
-            vals, stats = cholesky_execute_overlapped(plan, plan.a_values(a),
-                                                      dtype, overlap=True)
+        if chunked:
+            cached, source = self.cache.get_with_source(fp)
+            self._record_op(op_tag, source)
+            result, stats, artifact = spec.execute_chunked(
+                cached, operands, cfg, overlap=overlap, **kw)
+            if cached is None and artifact is not None:
+                try:
+                    artifact.fingerprint = fp
+                except (AttributeError, TypeError):
+                    pass    # custom artifacts need not carry a slot
+                self.cache.put(fp, artifact)
+            hit = cached is not None
         else:
-            _, vals, stats = planned_cholesky(a, dtype, plan=plan)
-            stats["overlap"] = False
-        stats.update(cache_hit=hit, inspect_s=inspect_s, fingerprint=fp.digest)
+            t0 = time.perf_counter()
+            plan, source = self.cache.get_with_source(fp)
+            self._record_op(op_tag, source)
+            if plan is None:
+                plan = spec.inspect(operands, cfg, fp, **kw)
+                self.cache.put(fp, plan)
+            inspect_s = time.perf_counter() - t0
+            hit = source is not None
+            result, stats = spec.execute_sync(plan, operands, cfg,
+                                              overlap=overlap, **kw)
+            stats["inspect_s"] = inspect_s
+        stats.update(cache_hit=hit, fingerprint=fp.digest)
+        return result, stats
+
+    def _record_op(self, op_tag: str, source: Optional[str]) -> None:
+        """Tally the per-op split at cache-acquisition time — the same
+        moment the aggregate CacheStats counter moves — so the two views
+        agree even when the executor later raises."""
+        with self._op_stats_lock:
+            rec = self._op_stats.setdefault(
+                op_tag, dict(hits=0, store_hits=0, misses=0))
+            rec["hits" if source == "memory"
+                else "store_hits" if source == "store" else "misses"] += 1
+
+    # -- Back-compat wrappers (thin adapters over run) ---------------------
+
+    def spgemm(self, a, b, method: str = "auto",
+               overlap: Optional[bool] = None) -> Tuple[object, dict]:
+        """C = A @ B through the plan cache, overlapped when chunkable."""
+        return self.run("spgemm", a, b, method=method, overlap=overlap)
+
+    def cholesky(self, a, dtype=jnp.float64,
+                 overlap: Optional[bool] = None):
+        """A = L Lᵀ through the plan cache; level-bundle emission overlaps
+        device execution (the etree schedule is the chunk stream).
+        Returns (plan, L values, stats)."""
+        (plan, vals), stats = self.run("cholesky", a, dtype=dtype,
+                                       overlap=overlap)
         return plan, vals, stats
 
-    # -- MoE dispatch ------------------------------------------------------
-
     def moe_dispatch(self, tokens: np.ndarray, expert_ids: np.ndarray,
-                     *, n_experts: int, capacity: Optional[int] = None
-                     ) -> Tuple[np.ndarray, MoeDispatchPlan, dict]:
+                     *, n_experts: int, capacity: Optional[int] = None):
         """Plan-cached MoE dispatch: tokens → (n_experts, capacity, d) RIR
         bundles for the grouped expert GEMM (kernels.moe_gemm).
 
@@ -205,31 +187,12 @@ class ReapRuntime:
         here: it is fingerprinted under the ``moe_dispatch`` op tag, so
         repeated routings (decode steps with a sticky router, re-scored
         batches, replayed traces) hit a warm bundling plan and the dispatch
-        cost collapses to two gathers.  Gate values never enter the key; pass
-        them to ``plan.combine`` after the expert GEMM.
-        """
-        cfg = self.config
-        tokens = np.asarray(tokens)
-        expert_ids = np.asarray(expert_ids)
-        t, k = expert_ids.shape
-        if capacity is None:
-            from repro.models.moe import expert_capacity
-            capacity = expert_capacity(t, n_experts, k,
-                                       cfg.moe_capacity_factor)
-        routing = routing_csr(expert_ids, n_experts)
-        fp = fingerprint_pattern("moe_dispatch", (routing,),
-                                 capacity=capacity)
-        t0 = time.perf_counter()
-        plan, hit = self.cache.get_or_build(
-            fp, lambda: inspect_moe_dispatch(routing, capacity, fp))
-        inspect_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        x_bundles = plan.bundle(tokens)
-        bundle_s = time.perf_counter() - t0
-        stats = dict(method="moe_dispatch", cache_hit=hit,
-                     inspect_s=inspect_s, bundle_s=bundle_s,
-                     capacity=capacity, dropped=plan.dropped_frac,
-                     fingerprint=fp.digest)
+        cost collapses to two gathers.  Gate values never enter the key;
+        pass them to ``plan.combine`` after the expert GEMM.
+        Returns (x_bundles, plan, stats)."""
+        (x_bundles, plan), stats = self.run(
+            "moe_dispatch", np.asarray(tokens), np.asarray(expert_ids),
+            n_experts=n_experts, capacity=capacity)
         return x_bundles, plan, stats
 
     # -- Introspection -----------------------------------------------------
@@ -239,6 +202,15 @@ class ReapRuntime:
         out = dict(entries=len(self.cache), capacity=self.cache.capacity,
                    hits=s.hits, misses=s.misses, evictions=s.evictions,
                    store_hits=s.store_hits, hit_rate=s.hit_rate)
+        # per-op-tag breakdown: every registered op reports, active or not
+        per_op = {tag: dict(hits=0, store_hits=0, misses=0)
+                  for tag in _ops.list_ops()}
+        with self._op_stats_lock:
+            for tag, rec in self._op_stats.items():
+                per_op.setdefault(tag, dict(hits=0, store_hits=0, misses=0))
+                for k, v in rec.items():
+                    per_op[tag][k] += v
+        out["per_op"] = per_op
         if self.store is not None:
             out["store"] = self.store.summary()
         return out

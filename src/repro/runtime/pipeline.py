@@ -280,6 +280,11 @@ class BlockChunkSet:
                 int(self.pair_bounds[k]), int(self.pair_bounds[k + 1]))
         return self.chunks[k]
 
+    def materialize(self) -> None:
+        """Force every lazy chunk slice (serialize_plan calls this)."""
+        for k in range(self.n_chunks):
+            self.chunk(k)
+
 
 def _chunk_scatter_maps(pat, blk_ids: np.ndarray):
     """Restrict a BsrPattern's element scatter to the given (sorted, unique)
@@ -515,3 +520,16 @@ def cholesky_execute_overlapped(plan: CholeskyPlan, a_vals: np.ndarray,
                  overlap=ostats.overlap, n_levels=plan.n_levels,
                  nnz_l=plan.nnz, flops=plan.flops())
     return np.asarray(vals[:plan.nnz]), stats
+
+
+# ---------------------------------------------------------------------------
+# Op-registry plan types: chunk sets serialize through the generic
+# serializer, so their names live in the registry's type table next to
+# their definitions (the per-op plan dataclasses register via OpSpec).
+# ---------------------------------------------------------------------------
+
+from .ops import register_plan_type  # noqa: E402
+
+register_plan_type("gather_chunkset", GatherChunkSet)
+register_plan_type("block_chunkset", BlockChunkSet)
+register_plan_type("block_chunk", BlockChunk)

@@ -11,22 +11,23 @@ compression/indexing setup the same way).  This module provides:
                         on the miss, so schedule bundles are bit-identical.
   * ``serialize_plan`` / ``deserialize_plan`` — plans ⇄ flat dict of numpy
     arrays (npz-compatible), so warm plans survive process restarts.
+
+The serializer walks the *op registry's* type table (``runtime.ops``):
+every plan dataclass an ``OpSpec`` declares in ``plan_types`` round-trips
+through here with no edits to this module — that is how a newly registered
+op (e.g. ``spmm``) becomes persistable for free.
 """
 from __future__ import annotations
 
 import dataclasses
+import sys
 import threading
 from collections import OrderedDict
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.etree import CholeskyPlan
-from repro.core.inspector import (BsrPattern, MoeDispatchPlan,
-                                  PatternFingerprint, SpGemmBlockPlan,
-                                  SpGemmGatherPlan)
-
-from .pipeline import BlockChunk, BlockChunkSet, GatherChunkSet
+from . import ops as _ops
 
 
 @dataclasses.dataclass
@@ -35,11 +36,27 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     store_hits: int = 0      # misses answered by the persistent store
+    rejected: int = 0        # puts refused by the max_entry_bytes guard
 
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.store_hits + self.misses
         return (self.hits + self.store_hits) / total if total else 0.0
+
+
+def _entry_nbytes(obj) -> int:
+    """Cheap size estimate of a cached entry (arrays dominate real plans)."""
+    if isinstance(obj, np.ndarray):
+        return int(obj.nbytes)
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return sum(_entry_nbytes(getattr(obj, f.name))
+                   for f in dataclasses.fields(obj))
+    if isinstance(obj, (list, tuple)):
+        return sum(_entry_nbytes(x) for x in obj)
+    if isinstance(obj, dict):           # dict-shaped custom plans
+        return sum(_entry_nbytes(k) + _entry_nbytes(v)
+                   for k, v in obj.items())
+    return sys.getsizeof(obj)
 
 
 class PlanCache:
@@ -50,6 +67,11 @@ class PlanCache:
     predictable for tests).  ``capacity <= 0`` disables caching entirely —
     every lookup is a miss and nothing is stored.
 
+    ``max_entry_bytes`` optionally rejects oversized entries at ``put``
+    (counted in ``stats.rejected``).  The runtime's route-decision cache
+    uses this: it is sized for tiny per-pattern strings, and the guard
+    keeps an accidental plan-sized object from silently squatting there.
+
     ``store`` optionally attaches a persistent ``plan_store.PlanStore``:
     an in-memory miss falls back to disk (counted as ``stats.store_hits``)
     and every ``put`` write-through-persists, so same-pattern work survives
@@ -57,46 +79,62 @@ class PlanCache:
     disabled (``capacity <= 0``).
     """
 
-    def __init__(self, capacity: int = 64, store=None):
+    def __init__(self, capacity: int = 64, store=None,
+                 max_entry_bytes: Optional[int] = None):
         self.capacity = capacity
         self.store = store
+        self.max_entry_bytes = max_entry_bytes
         self.stats = CacheStats()
-        self._entries: "OrderedDict[PatternFingerprint, object]" = OrderedDict()
+        # optional hook fired by clear() — the runtime resets its per-op
+        # counters through it so every stats view resets together
+        self.on_clear: Optional[Callable[[], None]] = None
+        self._entries: "OrderedDict[object, object]" = OrderedDict()
         self._lock = threading.Lock()
 
     def __len__(self) -> int:
         return len(self._entries)
 
-    def __contains__(self, fp: PatternFingerprint) -> bool:
+    def __contains__(self, fp) -> bool:
         with self._lock:
             return fp in self._entries
 
-    def _insert_locked(self, fp: PatternFingerprint, plan) -> None:
+    def _insert_locked(self, fp, plan) -> None:
         self._entries[fp] = plan
         self._entries.move_to_end(fp)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.stats.evictions += 1
 
-    def get(self, fp: PatternFingerprint):
+    def get_with_source(self, fp) -> Tuple[object, Optional[str]]:
+        """Lookup returning ``(plan, source)``; source is ``"memory"``,
+        ``"store"`` or ``None`` (miss) — the per-op stats the runtime
+        reports key off this."""
         with self._lock:
             if fp in self._entries:
                 self._entries.move_to_end(fp)
                 self.stats.hits += 1
-                return self._entries[fp]
+                return self._entries[fp], "memory"
         if self.store is not None and self.capacity > 0:
             plan = self.store.get(fp)       # disk IO outside the cache lock
             if plan is not None:
                 with self._lock:
                     self.stats.store_hits += 1
                     self._insert_locked(fp, plan)
-                return plan
+                return plan, "store"
         with self._lock:
             self.stats.misses += 1
-        return None
+        return None, None
 
-    def put(self, fp: PatternFingerprint, plan) -> None:
+    def get(self, fp):
+        return self.get_with_source(fp)[0]
+
+    def put(self, fp, plan) -> None:
         if self.capacity <= 0:
+            return
+        if self.max_entry_bytes is not None and \
+                _entry_nbytes(plan) > self.max_entry_bytes:
+            with self._lock:
+                self.stats.rejected += 1
             return
         with self._lock:
             self._insert_locked(fp, plan)
@@ -105,7 +143,7 @@ class PlanCache:
             # internally (stats.errors) so computation never fails on disk
             self.store.put(fp, plan)
 
-    def get_or_build(self, fp: PatternFingerprint, builder: Callable[[], object]):
+    def get_or_build(self, fp, builder: Callable[[], object]):
         """Return (plan, hit).  ``builder`` runs outside the lock on a miss."""
         plan = self.get(fp)
         if plan is not None:
@@ -115,27 +153,26 @@ class PlanCache:
         return plan, False
 
     def clear(self) -> None:
+        """Drop every entry and reset the counters (``store_hits``
+        included) — a cleared cache reports like a fresh one."""
         with self._lock:
             self._entries.clear()
+            self.stats = CacheStats()
+        if self.on_clear is not None:
+            self.on_clear()
 
 
 # ---------------------------------------------------------------------------
 # Serialization: plan dataclasses ⇄ flat {key: ndarray} dicts
 # ---------------------------------------------------------------------------
-
-_PLAN_TYPES = {"spgemm_gather": SpGemmGatherPlan,
-               "spgemm_block": SpGemmBlockPlan,
-               "cholesky": CholeskyPlan,
-               "bsr_pattern": BsrPattern,
-               "moe_dispatch": MoeDispatchPlan,
-               "gather_chunkset": GatherChunkSet,
-               "block_chunkset": BlockChunkSet,
-               "block_chunk": BlockChunk}
-_TYPE_NAMES = {v: k for k, v in _PLAN_TYPES.items()}
+#
+# The type table lives in the op registry (runtime.ops): each OpSpec's
+# plan_types (and runtime.pipeline's chunk-set registrations) populate it,
+# so this serializer never needs editing to support a new op.
 
 
 def _flatten(obj, prefix: str, out: Dict[str, np.ndarray]) -> None:
-    out[prefix + "__type"] = np.str_(_TYPE_NAMES[type(obj)])
+    out[prefix + "__type"] = np.str_(_ops.plan_type_name(type(obj)))
     for f in dataclasses.fields(obj):
         v = getattr(obj, f.name)
         key = f"{prefix}{f.name}"
@@ -165,7 +202,7 @@ def _flatten(obj, prefix: str, out: Dict[str, np.ndarray]) -> None:
 
 
 def _unflatten(data: Dict[str, np.ndarray], prefix: str):
-    cls = _PLAN_TYPES[str(data[prefix + "__type"])]
+    cls = _ops.plan_type(str(data[prefix + "__type"]))
     kwargs = {}
     for f in dataclasses.fields(cls):
         if f.name == "fingerprint":
@@ -194,10 +231,15 @@ def _unflatten(data: Dict[str, np.ndarray], prefix: str):
 
 
 def serialize_plan(plan) -> Dict[str, np.ndarray]:
-    """Plan → flat dict of numpy arrays (pass to ``np.savez`` to persist)."""
-    if isinstance(plan, BlockChunkSet):
-        for k in range(plan.n_chunks):
-            plan.chunk(k)               # materialize lazy slices first
+    """Plan → flat dict of numpy arrays (pass to ``np.savez`` to persist).
+
+    Plans that build parts of themselves lazily (chunk sets) expose a
+    ``materialize()`` method; it is invoked first so every nested field is
+    concrete.
+    """
+    materialize = getattr(plan, "materialize", None)
+    if callable(materialize):
+        materialize()
     out: Dict[str, np.ndarray] = {}
     _flatten(plan, "", out)
     return out

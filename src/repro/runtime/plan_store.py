@@ -51,6 +51,7 @@ CLI (``python -m repro.runtime.plan_store``)::
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import io
@@ -65,11 +66,18 @@ import numpy as np
 
 from repro.core.inspector import PatternFingerprint
 
-from .plan_cache import deserialize_plan, serialize_plan
+from . import ops as _ops
+from .plan_cache import deserialize_plan   # default payload deserializer
+
+try:
+    import fcntl
+except ImportError:                      # non-POSIX: lockless best-effort
+    fcntl = None
 
 SCHEMA_VERSION = 1
 MANIFEST = "manifest.json"
 PLANS_DIR = "plans"
+LOCKFILE = "manifest.lock"
 
 
 # ---------------------------------------------------------------------------
@@ -159,14 +167,19 @@ def _read_npz_fast(blob: bytes) -> Dict[str, np.ndarray]:
     return out
 
 
-def _load_payload(blob: bytes):
-    """Payload bytes → plan, via the fast in-memory reader when possible."""
+def _load_payload(blob: bytes, deserialize=None):
+    """Payload bytes → plan, via the fast in-memory reader when possible.
+
+    ``deserialize`` is the op's registered hook (``ops.deserializer_for``);
+    ``None`` falls back to the generic ``plan_cache.deserialize_plan``.
+    """
+    deserialize = deserialize or deserialize_plan
     try:
         data = _read_npz_fast(blob)
     except Exception:
         with np.load(io.BytesIO(blob), allow_pickle=False) as data:
-            return deserialize_plan(_unpack_payload(data))
-    return deserialize_plan(_unpack_payload(data))
+            return deserialize(_unpack_payload(data))
+    return deserialize(_unpack_payload(data))
 
 
 # ---------------------------------------------------------------------------
@@ -215,12 +228,21 @@ class StoreStats:
 class PlanStore:
     """Disk spill/load for inspector plans, keyed by pattern fingerprint.
 
-    Thread-safe within a process.  Across processes, atomic replaces keep
-    every individual file consistent; concurrent writers race benignly
-    (last manifest writer wins — a lost entry is re-persisted on the next
-    write-through, never corrupted).  ``byte_budget=None`` disables the
-    disk LRU.
+    Thread-safe within a process.  Across processes, payload files are
+    content-addressed and atomically replaced, and *manifest* mutations
+    take an advisory ``manifest.lock`` (fcntl flock) under which the
+    on-disk manifest is re-read and merged before writing — so multiple
+    serve workers sharing one ``store_dir`` accumulate each other's
+    entries instead of last-writer-wins clobbering.  Lock acquisition has
+    a short timeout and falls through to the old best-effort in-memory
+    behavior on contention (or on platforms without ``fcntl``): a lost
+    entry is re-persisted by the next write-through, never corrupted.
+    ``byte_budget=None`` disables the disk LRU.
     """
+
+    #: seconds to wait for the cross-process manifest lock before falling
+    #: through to an unmerged (in-memory-view) write
+    lock_timeout: float = 2.0
 
     def __init__(self, root, byte_budget: Optional[int] = 1 << 30,
                  compress: bool = False):
@@ -233,6 +255,51 @@ class PlanStore:
         self._entries: Optional[Dict[str, dict]] = None   # lazy manifest
         self._last_flush = 0.0          # throttles last_used persistence
         self._lock = threading.Lock()
+
+    @contextlib.contextmanager
+    def _manifest_flock(self, timeout: Optional[float] = None):
+        """Advisory cross-process lock around manifest read-modify-write.
+
+        Yields True when the flock was acquired — the caller must then
+        drop its cached manifest view (``self._entries = None``) so the
+        merge sees entries committed by other processes.  Yields False on
+        timeout/unsupported platforms; callers proceed best-effort (the
+        pre-lock behavior).  Lock order is flock OUTER, ``self._lock``
+        inner — everywhere — so a contended flock spin never stalls this
+        process's other store readers, and mixed orders can't deadlock
+        two threads of one process (same-process flocks on separate fds
+        do conflict).
+        """
+        if fcntl is None:
+            yield False
+            return
+        timeout = self.lock_timeout if timeout is None else timeout
+        try:
+            self.root.mkdir(parents=True, exist_ok=True)
+            fh = open(self.root / LOCKFILE, "a+")
+        except OSError:
+            yield False
+            return
+        got = False
+        deadline = time.monotonic() + timeout
+        try:
+            while True:
+                try:
+                    fcntl.flock(fh, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                    got = True
+                    break
+                except OSError:
+                    if time.monotonic() >= deadline:
+                        break
+                    time.sleep(0.02)
+            yield got
+        finally:
+            if got:
+                try:
+                    fcntl.flock(fh, fcntl.LOCK_UN)
+                except OSError:
+                    pass
+            fh.close()
 
     # -- manifest ----------------------------------------------------------
 
@@ -313,32 +380,69 @@ class PlanStore:
             blob = path.read_bytes()
             if hashlib.sha256(blob).hexdigest() != ent["sha256"]:
                 raise ValueError(f"payload digest mismatch for {key}")
-            plan = _load_payload(blob)
+            plan = _load_payload(blob, _ops.deserializer_for(fp.op))
         except Exception:
             self.stats.corrupt += 1
-            with self._lock:
-                self._drop_locked(key)
-                try:
-                    self._write_manifest_locked()
-                except OSError:
-                    self.stats.errors += 1
+            with self._manifest_flock() as locked:
+                with self._lock:
+                    if locked:
+                        self._entries = None    # merge concurrent writers
+                        self._load_manifest_locked()
+                    cur = (self._entries or {}).get(key)
+                    if cur is not None and \
+                            cur.get("sha256") != ent["sha256"]:
+                        # the mismatch came from OUR stale manifest view:
+                        # a concurrent writer re-persisted this key and
+                        # its fresh entry/payload are valid — leave them
+                        # alone, just miss
+                        return None
+                    self._drop_locked(key)
+                    try:
+                        self._write_manifest_locked()
+                    except OSError:
+                        self.stats.errors += 1
             return None
-        plan.fingerprint = fp
+        try:
+            plan.fingerprint = fp
+        except (AttributeError, TypeError):
+            pass    # custom plan formats need not carry a fingerprint slot
         self.stats.loads += 1
         self.stats.load_s += time.perf_counter() - t0
+        flush_due = False
         with self._lock:
             if key in (self._entries or {}):
                 now = time.time()
                 self._entries[key]["last_used"] = now
                 # persist recency even in read-only processes (a restart
                 # that only ever hits would otherwise look cold to a later
-                # gc); throttled so a warm-restart burst costs one write
+                # gc); throttled so a warm-restart burst costs one write.
+                # The stamp advances for contended attempts too, so a
+                # busy/unsupported lock costs one short spin per 5 s
+                # window, not one per get.
                 if now - self._last_flush > 5.0:
-                    try:
-                        self._write_manifest_locked()
-                        self._last_flush = now
-                    except OSError:
-                        self.stats.errors += 1
+                    self._last_flush = now
+                    flush_due = True
+        if flush_due:
+            # flock spin runs with self._lock RELEASED (lock order: flock
+            # outer); recency is advisory, so on contention just skip
+            with self._manifest_flock(timeout=0.1) as locked:
+                if locked:
+                    with self._lock:
+                        # merge every in-memory recency update (all keys
+                        # read since the last flush, not just this one)
+                        # into the freshest on-disk view
+                        mem = self._entries or {}
+                        self._entries = None
+                        entries = self._load_manifest_locked()
+                        for k, e in mem.items():
+                            if k in entries:
+                                entries[k]["last_used"] = max(
+                                    entries[k].get("last_used", 0.0),
+                                    e.get("last_used", 0.0))
+                        try:
+                            self._write_manifest_locked()
+                        except OSError:
+                            self.stats.errors += 1
         return plan
 
     def put(self, fp: PatternFingerprint, plan) -> None:
@@ -349,26 +453,35 @@ class PlanStore:
         """
         key = store_key(fp)
         try:
+            serialize = _ops.serializer_for(fp.op)
             buf = io.BytesIO()
             save = np.savez_compressed if self.compress else np.savez
-            save(buf, **_pack_payload(serialize_plan(plan)))
+            save(buf, **_pack_payload(serialize(plan)))
             blob = buf.getvalue()
-            with self._lock:
-                entries = self._load_manifest_locked()
-                self._plans.mkdir(parents=True, exist_ok=True)
-                tmp = self._plans / f".{key}.npz.tmp-{os.getpid()}"
-                tmp.write_bytes(blob)
-                os.replace(tmp, self._plans / f"{key}.npz")
-                now = time.time()
-                entries[key] = {"fingerprint": fingerprint_to_json(fp),
-                                "op": fp.op,
-                                "payload": f"{key}.npz",
-                                "sha256": hashlib.sha256(blob).hexdigest(),
-                                "bytes": len(blob),
-                                "saved_at": now,
-                                "last_used": now}
-                self._gc_locked(self.byte_budget)
-                self._write_manifest_locked()
+            with self._manifest_flock() as locked:
+                with self._lock:
+                    if locked:
+                        # merge-write: re-read the on-disk manifest so
+                        # entries committed by other workers since our
+                        # view was loaded survive this write (the lock
+                        # makes it atomic)
+                        self._entries = None
+                    entries = self._load_manifest_locked()
+                    self._plans.mkdir(parents=True, exist_ok=True)
+                    tmp = self._plans / f".{key}.npz.tmp-{os.getpid()}"
+                    tmp.write_bytes(blob)
+                    os.replace(tmp, self._plans / f"{key}.npz")
+                    now = time.time()
+                    entries[key] = {
+                        "fingerprint": fingerprint_to_json(fp),
+                        "op": fp.op,
+                        "payload": f"{key}.npz",
+                        "sha256": hashlib.sha256(blob).hexdigest(),
+                        "bytes": len(blob),
+                        "saved_at": now,
+                        "last_used": now}
+                    self._gc_locked(self.byte_budget)
+                    self._write_manifest_locked()
             self.stats.saves += 1
         except Exception:
             self.stats.errors += 1
@@ -419,14 +532,16 @@ class PlanStore:
 
     def gc(self, byte_budget: Optional[int] = None) -> List[str]:
         """Evict LRU entries beyond the byte budget; sweep orphan files."""
-        with self._lock:
-            # re-read the manifest so the sweep sees entries committed by
-            # other processes since ours was loaded
-            self._entries = None
-            evicted = self._gc_locked(
-                self.byte_budget if byte_budget is None else byte_budget,
-                sweep=True)
-            self._write_manifest_locked()
+        with self._manifest_flock():
+            with self._lock:
+                # re-read the manifest so the sweep sees entries committed
+                # by other processes since ours was loaded (done locked or
+                # not: maintenance always acts on the freshest view)
+                self._entries = None
+                evicted = self._gc_locked(
+                    self.byte_budget if byte_budget is None
+                    else byte_budget, sweep=True)
+                self._write_manifest_locked()
         return evicted
 
     def verify(self, prune: bool = False) -> dict:
@@ -443,7 +558,7 @@ class PlanStore:
                 blob = (self._plans / ent["payload"]).read_bytes()
                 if hashlib.sha256(blob).hexdigest() != ent["sha256"]:
                     raise ValueError("digest mismatch")
-                _load_payload(blob)
+                _load_payload(blob, _ops.deserializer_for(ent.get("op", "")))
                 ok.append(key)
             except Exception:
                 corrupt.append(key)
@@ -452,21 +567,24 @@ class PlanStore:
                     if f.name not in owned]
                    if self._plans.is_dir() else [])
         if prune and (corrupt or orphans):
-            with self._lock:
-                for key in corrupt:
-                    self._drop_locked(key)
-                self._gc_locked(self.byte_budget, sweep=True)
-                self._write_manifest_locked()
+            with self._manifest_flock():
+                with self._lock:
+                    for key in corrupt:
+                        self._drop_locked(key)
+                    self._gc_locked(self.byte_budget, sweep=True)
+                    self._write_manifest_locked()
             self.stats.corrupt += len(corrupt)
         return {"ok": ok, "corrupt": corrupt, "orphans": orphans}
 
     def clear(self) -> None:
-        with self._lock:
-            self._load_manifest_locked()
-            for key in list(self._entries or {}):
-                self._drop_locked(key)
-            self._gc_locked(0, sweep=True)
-            self._write_manifest_locked()
+        with self._manifest_flock():
+            with self._lock:
+                self._entries = None    # clear the freshest on-disk view
+                self._load_manifest_locked()
+                for key in list(self._entries or {}):
+                    self._drop_locked(key)
+                self._gc_locked(0, sweep=True)
+                self._write_manifest_locked()
 
     def summary(self) -> dict:
         with self._lock:

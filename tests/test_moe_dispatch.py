@@ -144,3 +144,70 @@ class TestScheduleKernel:
                                              bk=D, bf=D))
         ref = np.einsum("ecd,edf->ecf", x_bundles, w)
         np.testing.assert_allclose(y, ref, rtol=1e-3, atol=1e-3)
+
+
+class TestHostDispatchServing:
+    """The eager serving path (serve.py --host-moe) must agree with the
+    traced in-graph moe_ffn on the same inputs when nothing overflows."""
+
+    def test_host_path_matches_in_graph(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import moe
+
+        b, s, d, e, k, dff = 2, 16, 32, 4, 2, 48
+        keys = jax.random.split(jax.random.PRNGKey(0), 5)
+        x = jax.random.normal(keys[0], (b, s, d), jnp.float32)
+        p = dict(
+            router=jax.random.normal(keys[1], (d, e), jnp.float32) * 0.1,
+            w_gate=jax.random.normal(keys[2], (e, d, dff), jnp.float32)
+            / np.sqrt(d),
+            w_up=jax.random.normal(keys[3], (e, d, dff), jnp.float32)
+            / np.sqrt(d),
+            w_down=jax.random.normal(keys[4], (e, dff, d), jnp.float32)
+            / np.sqrt(dff))
+        # generous capacity ⇒ zero drops on both paths, so the only
+        # difference is bundling order (pure fp reassociation)
+        kw = dict(n_experts=e, top_k=k, capacity_factor=8.0)
+        ref, _ = moe.moe_ffn(x, p, **kw)          # in-graph (no runtime)
+        rt = ReapRuntime()
+        moe.set_host_dispatch_runtime(rt)
+        try:
+            host, aux = moe.moe_ffn(x, p, **kw)   # eager, registry-routed
+            host2, _ = moe.moe_ffn(x, p, **kw)    # second call: warm plan
+        finally:
+            moe.set_host_dispatch_runtime(None)
+        np.testing.assert_allclose(np.asarray(host), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_array_equal(np.asarray(host), np.asarray(host2))
+        assert float(aux) == 0.0
+        per = rt.cache_stats()["per_op"]["moe_dispatch"]
+        assert per["misses"] == 1 and per["hits"] == 1
+
+    def test_traced_call_ignores_host_runtime(self):
+        """jitted moe_ffn must keep the in-graph path even with a runtime
+        installed (tracers can't reach the host plan cache)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import moe
+
+        b, s, d, e, k, dff = 1, 8, 16, 4, 2, 24
+        keys = jax.random.split(jax.random.PRNGKey(1), 5)
+        x = jax.random.normal(keys[0], (b, s, d), jnp.float32)
+        p = dict(
+            router=jax.random.normal(keys[1], (d, e), jnp.float32) * 0.1,
+            w_gate=jax.random.normal(keys[2], (e, d, dff), jnp.float32),
+            w_up=jax.random.normal(keys[3], (e, d, dff), jnp.float32),
+            w_down=jax.random.normal(keys[4], (e, dff, d), jnp.float32))
+        kw = dict(n_experts=e, top_k=k, capacity_factor=8.0)
+        ref, _ = jax.jit(lambda xx: moe.moe_ffn(xx, p, **kw))(x)
+        rt = ReapRuntime()
+        moe.set_host_dispatch_runtime(rt)
+        try:
+            traced, _ = jax.jit(lambda xx: moe.moe_ffn(xx, p, **kw))(x)
+        finally:
+            moe.set_host_dispatch_runtime(None)
+        np.testing.assert_array_equal(np.asarray(traced), np.asarray(ref))
+        assert rt.cache_stats()["misses"] == 0    # never consulted

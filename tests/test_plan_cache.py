@@ -106,6 +106,76 @@ class TestPlanCache:
         cache.put(fp, "plan")
         assert len(cache) == 0 and cache.get(fp) is None
 
+    def test_max_entry_bytes_guard(self):
+        """Oversized entries are refused at put (the route-cache guard)."""
+        cache = PlanCache(capacity=8, max_entry_bytes=1024)
+        fps = [fingerprint_pattern("op", (_rand(10 + i, 10, 0.3, i),))
+               for i in range(2)]
+        cache.put(fps[0], "gather")                       # tiny: admitted
+        assert cache.get(fps[0]) == "gather"
+        big = inspect_spgemm_gather(_rand(60, 60, 0.1, 3),
+                                    _rand(60, 60, 0.1, 4))
+        cache.put(fps[1], big)                            # plan-sized: no
+        assert fps[1] not in cache
+        assert cache.stats.rejected == 1
+
+    def test_route_cache_guard_wired_in_runtime(self):
+        rt = ReapRuntime(use_pallas=False)
+        assert rt._routes.max_entry_bytes is not None
+        a = _rand(80, 80, 0.05, 5)
+        rt.spgemm(a, a)                  # auto-routing populates _routes
+        assert len(rt._routes) == 1 and rt._routes.stats.rejected == 0
+
+
+class TestCacheStats:
+    def test_clear_resets_all_counters(self, tmp_path):
+        """clear() must reset stats — store_hits included — so a cleared
+        cache reports like a fresh one."""
+        from repro.runtime import PlanStore
+        store = PlanStore(tmp_path)
+        cache = PlanCache(capacity=4, store=store)
+        a = _rand(40, 40, 0.1, 1)
+        fp = fingerprint_pattern("spgemm_gather", (a, a), tile=1024)
+        cache.put(fp, inspect_spgemm_gather(a, a))
+        fresh = PlanCache(capacity=4, store=store)
+        assert fresh.get(fp) is not None            # answered by the store
+        fresh.get(fingerprint_pattern("spgemm_gather", (a, a), tile=512))
+        fresh.get(fp)
+        s = fresh.stats
+        assert (s.hits, s.store_hits, s.misses) == (1, 1, 1)
+        fresh.clear()
+        s = fresh.stats
+        assert (s.hits, s.store_hits, s.misses, s.evictions,
+                s.rejected) == (0, 0, 0, 0, 0)
+        assert len(fresh) == 0 and s.hit_rate == 0.0
+
+    def test_runtime_cache_stats_reflect_clear(self, tmp_path):
+        rt = ReapRuntime(n_chunks=1, use_pallas=False,
+                         store_dir=str(tmp_path))
+        a = _rand(50, 50, 0.1, 2)
+        rt.spgemm(a, a, method="gather")
+        rt2 = ReapRuntime(n_chunks=1, use_pallas=False,
+                          store_dir=str(tmp_path))
+        rt2.spgemm(a, a, method="gather")
+        assert rt2.cache_stats()["store_hits"] == 1
+        rt2.cache.clear()
+        cs = rt2.cache_stats()
+        assert cs["store_hits"] == 0 and cs["hits"] == 0 \
+            and cs["misses"] == 0
+        # the per-op split resets with the aggregates (cache.on_clear)
+        assert all(not any(rec.values()) for rec in cs["per_op"].values())
+
+    def test_per_op_breakdown_present(self):
+        rt = ReapRuntime(n_chunks=1, use_pallas=False)
+        a = _rand(50, 50, 0.1, 3)
+        rt.spgemm(a, a, method="gather")
+        rt.spgemm(_revalue(a, 9), _revalue(a, 9), method="gather")
+        per_op = rt.cache_stats()["per_op"]
+        from repro.runtime import list_ops
+        assert set(list_ops()) <= set(per_op)
+        assert per_op["spgemm_gather"]["misses"] == 1
+        assert per_op["spgemm_gather"]["hits"] == 1
+
 
 class TestRuntimeCaching:
     def test_warm_spgemm_matches_and_skips_inspection(self):

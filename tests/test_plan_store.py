@@ -196,6 +196,109 @@ class TestFailureModes:
         assert report["corrupt"] and len(store) == 0
 
 
+class TestCrossProcessLocking:
+    """Manifest mutations take manifest.lock and merge the on-disk state,
+    so concurrent writers sharing one store_dir stop being
+    last-writer-wins (they still fall through to best-effort writes on
+    lock contention)."""
+
+    def _plan_fp(self, seed):
+        a = _rand(40 + seed, 40 + seed, 0.1, seed)
+        return (inspect_spgemm_gather(a, a),
+                fingerprint_pattern("spgemm_gather", (a, a), tile=1024))
+
+    def test_stale_writer_merges_not_clobbers(self, tmp_path):
+        p1, fp1 = self._plan_fp(1)
+        p2, fp2 = self._plan_fp(2)
+        s1, s2 = PlanStore(tmp_path), PlanStore(tmp_path)
+        assert len(s2) == 0          # s2 caches an (empty) manifest view
+        s1.put(fp1, p1)
+        s2.put(fp2, p2)              # stale view: must merge under lock
+        s3 = PlanStore(tmp_path)
+        assert len(s3) == 2
+        assert s3.get(fp1) is not None and s3.get(fp2) is not None
+
+    def test_contention_falls_through(self, tmp_path):
+        import repro.runtime.plan_store as ps
+        if ps.fcntl is None:
+            import pytest
+            pytest.skip("no fcntl on this platform")
+        p1, fp1 = self._plan_fp(3)
+        holder = open(tmp_path / ps.LOCKFILE, "a+")
+        ps.fcntl.flock(holder, ps.fcntl.LOCK_EX)
+        try:
+            store = PlanStore(tmp_path)
+            store.lock_timeout = 0.1
+            store.put(fp1, p1)       # contended: no hang, best-effort write
+        finally:
+            ps.fcntl.flock(holder, ps.fcntl.LOCK_UN)
+            holder.close()
+        assert store.stats.errors == 0
+        assert PlanStore(tmp_path).get(fp1) is not None
+
+    def test_stale_reader_mismatch_spares_fresh_entry(self, tmp_path):
+        """A sha mismatch caused by the reader's own stale manifest view
+        must not delete a concurrent writer's re-persisted valid entry."""
+        p1, fp1 = self._plan_fp(5)
+        s_writer = PlanStore(tmp_path)
+        s_writer.put(fp1, p1)
+        s_reader = PlanStore(tmp_path)
+        assert len(s_reader) == 1            # reader caches this view
+        # concurrent writer re-persists the same key with different bytes
+        s_writer2 = PlanStore(tmp_path, compress=True)
+        s_writer2.put(fp1, p1)
+        # reader's cached sha no longer matches the new payload → its get
+        # misses, but it must leave the writer's fresh entry intact
+        assert s_reader.get(fp1) is None
+        assert s_reader.stats.corrupt == 1
+        fresh = PlanStore(tmp_path)
+        assert fresh.get(fp1) is not None    # survived the stale reader
+
+    def test_custom_plan_without_fingerprint_slot(self, tmp_path):
+        """Custom serialize/deserialize hooks may persist plan objects that
+        don't accept attribute assignment (e.g. plain dicts)."""
+        import numpy as np_
+        from repro.runtime import OpSpec, register_op, unregister_op
+
+        def ser(plan):
+            return {k: np_.asarray(v) for k, v in plan.items()}
+
+        def deser(flat):
+            return {k: np_.asarray(v) for k, v in flat.items()
+                    if not k.endswith("__type")}
+
+        spec = OpSpec(
+            tag="dict_plan_op",
+            fingerprint=lambda operands, cfg, *, chunked, **kw:
+                fingerprint_pattern("dict_plan_op", operands),
+            inspect=lambda operands, cfg, fp, **kw:
+                {"ids": operands[0].indices.copy()},
+            execute_sync=lambda plan, operands, cfg, *, overlap, **kw:
+                (int(plan["ids"].sum()), dict(method="dict_plan_op")),
+            serialize=ser, deserialize=deser)
+        register_op(spec)
+        try:
+            a = _rand(20, 20, 0.2, 6)
+            rt1 = ReapRuntime(store_dir=str(tmp_path))
+            r1, st1 = rt1.run("dict_plan_op", a)
+            assert not st1["cache_hit"]
+            assert rt1.store.summary()["saves"] == 1
+            rt2 = ReapRuntime(store_dir=str(tmp_path))   # fresh process
+            r2, st2 = rt2.run("dict_plan_op", a)
+            assert st2["cache_hit"] and r1 == r2         # no crash, warm
+        finally:
+            unregister_op("dict_plan_op")
+
+    def test_lockfile_not_treated_as_orphan(self, tmp_path):
+        p1, fp1 = self._plan_fp(4)
+        store = PlanStore(tmp_path)
+        store.put(fp1, p1)
+        report = store.verify()
+        assert not report["orphans"]     # lock lives outside plans/
+        store.gc()
+        assert store.get(fp1) is not None
+
+
 class TestDiskLru:
     def test_byte_budget_evicts_lru(self, tmp_path):
         store = PlanStore(tmp_path, byte_budget=None)
