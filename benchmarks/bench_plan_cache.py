@@ -11,8 +11,10 @@
    Modes are timed in back-to-back pairs and judged on the best pair: on a
    CPU-only container the "device" shares cores with the host, so this is
    the claim that overlap costs no wall time, not that it wins here.
-3. **per-op coverage** — every tag in ``runtime.ops.list_ops()`` with a
-   driver here is run miss-then-hit through one runtime and its
+3. **per-op coverage** — every tag in ``runtime.ops.list_ops()`` with an
+   example problem (the shared ``repro.analysis.op_examples`` table, also
+   replayed by the purity harness) is run miss-then-hit through one
+   runtime and its
    ``cache_stats()["per_op"]`` split is reported, so the benchmark output
    enumerates coverage from the op registry instead of a hard-coded list.
 
@@ -40,7 +42,11 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import CSR, random_csr, random_spd_csr
-from repro.runtime import ReapRuntime, list_ops
+from repro.runtime import ReapRuntime
+
+# per-op coverage is registry-driven and shared with fig6/fig10 (and the
+# analysis purity harness) — see op_coverage / repro.analysis.op_examples
+from .op_coverage import per_op_breakdown  # noqa: F401  (re-export)
 
 
 def _revalue(a: CSR, rng: np.random.Generator) -> CSR:
@@ -131,7 +137,7 @@ def bench_spgemm_overlap(n: int = 2000, density: float = 0.01,
     # One retry if the first attempt fails: overlap runs two threads, so a
     # sustained co-tenant load spike punishes it asymmetrically; a genuine
     # regression fails both attempts.
-    for attempt in range(2):
+    for _attempt in range(2):
         sync_t, over_t, ratios = [], [], []
         for r in range(repeats):
             if r % 2 == 0:
@@ -199,68 +205,6 @@ def bench_spmm_cache(n: int = 4096, density: float = 0.02, t: int = 32,
         print(f"plan_cache,spmm,n={n},cold_ms={cold * 1e3:.1f},"
               f"warm_ms={warm * 1e3:.1f},speedup={speedup:.2f},"
               f"{'PASS' if row['ok'] else 'FAIL'}(>=1.4x)")
-    return row
-
-
-def per_op_breakdown(reduced: bool = False, verbose: bool = True) -> dict:
-    """Exercise every registered op through ONE runtime (miss, then hit)
-    and report the per-op-tag hit/miss/store-hit split from
-    ``cache_stats()["per_op"]`` — the coverage table is driven by
-    ``runtime.ops.list_ops()``, so a newly registered op shows up here
-    with no benchmark edits."""
-    n = 512 if reduced else 1024
-    rng = np.random.default_rng(7)
-    rt = ReapRuntime(n_chunks=1, overlap=False, use_pallas=False, block=64)
-
-    drivers = {
-        "spgemm_gather": lambda: rt.run(
-            "spgemm", *(2 * [random_csr(n, n, 0.01,
-                                        np.random.default_rng(7))]),
-            method="gather"),
-        "spgemm_block": lambda: rt.run(
-            "spgemm", *(2 * [random_csr(n, n, 0.02,
-                                        np.random.default_rng(8), "blocky")]),
-            method="block"),
-        "cholesky": lambda: rt.run(
-            "cholesky", random_spd_csr(n // 2, 0.02,
-                                       np.random.default_rng(9)),
-            dtype=jnp.float32),
-        "moe_dispatch": lambda: rt.run(
-            "moe_dispatch",
-            np.random.default_rng(10).standard_normal((n, 64)),
-            np.random.default_rng(10).integers(0, 8, (n, 2)), n_experts=8),
-        "spmm": lambda: rt.run(
-            "spmm", rng.standard_normal((32, n)).astype(np.float32),
-            random_csr(n, n, 0.02, np.random.default_rng(11), "blocky")),
-    }
-    from repro.runtime import get_op
-    covered, skipped = [], []
-    for tag in list_ops():
-        drive = drivers.get(tag)
-        if drive is None:
-            # router/alias tags never own cache entries; any OTHER
-            # registered op without a driver is a coverage gap and is
-            # reported (and fails the verdict) rather than silently skipped
-            if get_op(tag).route is None:
-                skipped.append(tag)
-            continue
-        drive()                         # miss (cold)
-        drive()                         # hit (warm)
-        covered.append(tag)
-    per_op = {tag: rec for tag, rec in rt.cache_stats()["per_op"].items()
-              if tag in covered}
-    ok = not skipped and all(rec["hits"] >= 1 and rec["misses"] >= 1
-                             for rec in per_op.values())
-    row = dict(bench="per_op_breakdown", registered=list_ops(),
-               per_op=per_op, skipped=skipped, ok=ok)
-    if verbose:
-        for tag, rec in sorted(per_op.items()):
-            print(f"plan_cache,per_op,{tag},hits={rec['hits']},"
-                  f"store_hits={rec['store_hits']},misses={rec['misses']}")
-        for tag in skipped:
-            print(f"plan_cache,per_op,{tag},SKIPPED(no driver)")
-        print(f"plan_cache,per_op,verdict,"
-              f"{'PASS' if ok else 'FAIL'}(hit+miss per registered op)")
     return row
 
 

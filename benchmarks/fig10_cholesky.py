@@ -15,6 +15,7 @@ from repro.core.simulator import (REAP_32C, REAP_64C,
                                   simulate_cholesky_cpu,
                                   simulate_cholesky_reap)
 
+from .op_coverage import per_op_warm_rows
 from .table1 import CHOLESKY_SET, make_chol_matrix
 
 
@@ -61,6 +62,9 @@ def run(verbose: bool = True) -> List[dict]:
         mean_idle64 = float(np.mean([r['idle64'] for r in rows]))
         print(f"fig10_idle,mean_idle_32p,{mean_idle32:.2f},"
               f"mean_idle_64p,{mean_idle64:.2f}")
+    # registry-driven coda: warm-plan amortization for every registered
+    # op (list_ops()) — new ops appear here with no edits to this script
+    rows += per_op_warm_rows(n=384, verbose=verbose, prefix="fig10")
     return rows
 
 

@@ -23,6 +23,7 @@ from repro.core.simulator import (REAP_32, REAP_64, REAP_128,
                                   spgemm_workload)
 from repro.runtime import ReapRuntime
 
+from .op_coverage import per_op_warm_rows
 from .table1 import SPGEMM_SET, make_spgemm_matrix
 
 
@@ -96,8 +97,12 @@ def run(verbose: bool = True) -> List[dict]:
         print(f"fig6_geomean,REAP-128,{gm['REAP-128']:.2f}")
         print(f"fig6_geomean,measured_reap_vs_numpy,{gm['measured']:.2f}")
         print(f"fig6_geomean,warm_cache_vs_numpy,{gm['warm']:.2f}")
+    # registry-driven coda: the same cold-vs-warm amortization, but for
+    # EVERY registered op (list_ops()), so a newly admitted op appears in
+    # the fig6 output with no edits here
+    per_op = per_op_warm_rows(n=384, verbose=verbose, prefix="fig6")
     return rows + [dict(id="GEOMEAN", **{f"speedup_{k}": v
-                                         for k, v in gm.items()})]
+                                         for k, v in gm.items()})] + per_op
 
 
 if __name__ == "__main__":

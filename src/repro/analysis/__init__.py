@@ -1,0 +1,22 @@
+"""reaplint — static invariant checker for the REAP planned-op contract.
+
+REAP's phase separation (CPU inspector organizes the *pattern*, the
+executor only computes) is what makes plans cacheable, persistable, and
+replayable.  This package enforces that contract by machine:
+
+* static rules REAP001–REAP004 (see :mod:`.rules`) lint plan purity,
+  registry completeness, host-sync hygiene, and launch-shape discipline;
+* a dynamic purity harness (:mod:`.purity_check`) replays every
+  registered op with perturbed values and asserts bit-identical plans.
+
+Run it as ``python -m repro.analysis --check src`` (stdlib-only; the CI
+``lint.yml`` job gates on it) or ``--purity`` for the dynamic harness
+(needs the jax/numpy stack).  Violations are suppressed — and counted —
+with ``# reaplint: disable=REAP00x <reason>``; the reason is mandatory.
+
+docs/architecture.md "Enforced invariants" documents each rule.
+"""
+from .checker import (ReaplintChecker, check_paths,  # noqa: F401
+                      check_source, check_sources, load_ops_metadata)
+from .diagnostics import Diagnostic, Report  # noqa: F401
+from .rules import RULES  # noqa: F401

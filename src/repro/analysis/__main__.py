@@ -1,0 +1,63 @@
+"""CLI: ``python -m repro.analysis --check src [--summary out.json]``.
+
+Exit status is 0 iff no unsuppressed violations (and, with ``--purity``,
+every registered op replays to a bit-identical plan).  ``--summary``
+writes the counts as JSON — the CI lint job uploads it as an artifact so
+the suppression count is visible per run, not just pass/fail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .checker import check_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reaplint: REAP plan-contract checker (REAP001-004)")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--check", nargs="+", default=None, metavar="PATH",
+                    help="explicit lint targets (same as positional)")
+    ap.add_argument("--summary", metavar="FILE",
+                    help="write a JSON summary (violations/suppressions)")
+    ap.add_argument("--purity", action="store_true",
+                    help="also run the dynamic purity harness over every "
+                         "registered op (requires jax/numpy)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="print suppressed diagnostics too")
+    args = ap.parse_args(argv)
+
+    paths = list(args.check or []) + list(args.paths)
+    if not paths and not args.purity:
+        paths = ["src"] if Path("src").is_dir() else ["."]
+
+    ok = True
+    summary = {}
+    if paths:
+        report = check_paths(paths)
+        print(report.format_text(show_suppressed=args.show_suppressed))
+        summary = report.summary()
+        ok = report.ok
+
+    if args.purity:
+        from .purity_check import run_purity_checks
+        results = run_purity_checks()
+        for tag, res in sorted(results.items()):
+            state = "PASS" if res["ok"] else f"FAIL ({res['detail']})"
+            print(f"reaplint purity: {tag}: {state}")
+        summary["purity"] = {t: r["ok"] for t, r in results.items()}
+        ok = ok and all(r["ok"] for r in results.values())
+
+    if args.summary:
+        Path(args.summary).write_text(json.dumps(summary, indent=2,
+                                                 sort_keys=True) + "\n")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

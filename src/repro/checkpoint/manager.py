@@ -38,7 +38,7 @@ def _flatten(tree) -> Dict[str, Any]:
 def _unflatten_into(template, flat: Dict[str, Any]):
     paths = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
-    for path, leaf in paths[0]:
+    for path, _leaf in paths[0]:
         key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
                        for k in path)
         if key not in flat:

@@ -170,8 +170,13 @@ def inspect_cholesky(a: CSR,
     # selection of A's lower entries directly in A.data order: canonical CSR
     # keeps lower_triangle() order-stable, so this gather replaces the
     # per-call rebuild+sort on the warm path (plan.a_values)
-    a_lower_sel = np.nonzero(a.nnz_rows() >= a.indices)[0]
-    assert np.array_equal(a.data[a_lower_sel], a_coo.val), \
+    a_rows = a.nnz_rows()
+    a_lower_sel = np.nonzero(a_rows >= a.indices)[0]
+    # canonicality check on (row, col) keys, not values: the gather's
+    # coordinate sequence must equal the canonicalized lower triangle's,
+    # keeping the plan build pattern-pure (reaplint REAP001)
+    key_sel = a_rows[a_lower_sel] * np.int64(n) + a.indices[a_lower_sel]
+    assert np.array_equal(key_sel, a_coo.row * np.int64(n) + a_coo.col), \
         "CSR not canonical (cols unsorted within rows)"
 
     # --- update triples: for column j, ordered pairs (p <= q) of off-diag

@@ -35,6 +35,7 @@ import numpy as np
 
 from .formats import BsrPattern, CSR, bsr_pattern_from_csr  # noqa: F401
 from .rir import ScheduleBundle
+from .routing import expert_assignment, scatter_to_slots
 
 
 def next_pow2(n: int) -> int:
@@ -408,20 +409,17 @@ def inspect_moe_dispatch(routing: CSR, capacity: int,
     """
     t, n_experts = routing.n_rows, routing.n_cols
     top_k = int(routing.nnz // max(1, t))
-    e_flat = routing.indices
-    order = np.argsort(e_flat, kind="stable")
-    sorted_e = e_flat[order]
-    first = np.searchsorted(sorted_e, sorted_e, side="left")
-    pos_sorted = np.arange(t * top_k, dtype=np.int64) - first
-    pos = np.empty_like(pos_sorted)
-    pos[order] = pos_sorted
-    keep = pos < capacity
+    # the assignment math is shared with the traced path (models.moe) —
+    # core.routing is the single source of truth for both
+    _, _, dest = expert_assignment(routing.indices, capacity, n_experts,
+                                   xp=np)
+    dest = dest.astype(np.int64)
     n_slots = n_experts * capacity
-    dest = np.where(keep, e_flat * capacity + pos, n_slots).astype(np.int64)
-    slot_token = np.full(n_slots + 1, t, dtype=np.int64)
-    slot_token[dest] = np.repeat(np.arange(t, dtype=np.int64), top_k)
+    slot_token = scatter_to_slots(
+        dest, np.repeat(np.arange(t, dtype=np.int64), top_k), n_slots,
+        fill=t, xp=np)
     return MoeDispatchPlan(t, n_experts, top_k, capacity, dest,
-                           slot_token[:n_slots], fingerprint)
+                           slot_token, fingerprint)
 
 
 def choose_spgemm_path(a: CSR, b: CSR, block: int = 128,

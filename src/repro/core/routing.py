@@ -1,0 +1,68 @@
+"""Token→expert assignment math — ONE source of truth.
+
+The rank-within-expert capacity assignment (argsort → first-occurrence →
+position → keep/drop → bundle-slot destination) is the heart of MoE
+dispatch, and it runs in two worlds that must agree bit-for-bit:
+
+* **numpy, on the host** — ``core.inspector.inspect_moe_dispatch`` bakes
+  it into the pattern-pure ``MoeDispatchPlan`` (plan-cached, persisted);
+* **jax.numpy, in-graph** — ``models.moe.route_and_bundle`` and
+  ``models.moe._row_dispatch`` trace it inside jitted prefill/train
+  steps (vmap-safe).
+
+Any drift between the copies silently breaks the serving-path equivalence
+(tests/test_moe_dispatch.py ``TestHostDispatchServing``), so both import
+these helpers instead of keeping private copies.  Callers pass the array
+namespace: ``xp=np`` (default) or ``xp=jnp``; the numpy branch pins the
+stable sort and in-place scatter that jax expresses differently
+(``jnp.argsort`` is stable by default, scatter is ``.at[].set``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def expert_assignment(e_flat, capacity: int, n_experts: int, xp=np):
+    """Capacity-limited bundle-slot assignment for flat expert choices.
+
+    ``e_flat``: (n_tokens * top_k,) expert index per flat assignment, in
+    row-major token order.  Returns ``(pos, keep, dest)``: position within
+    the expert's bundle, the keep mask (``pos < capacity``; overflow drops
+    in stable flat order), and the destination slot — with
+    ``n_experts * capacity`` as the overflow slot.
+    """
+    n = e_flat.shape[0]
+    if xp is np:
+        order = np.argsort(e_flat, kind="stable")
+        sorted_e = e_flat[order]
+        # rank within expert: index − first-occurrence index (sorted layout)
+        first = np.searchsorted(sorted_e, sorted_e, side="left")
+        pos_sorted = np.arange(n, dtype=np.int64) - first
+        pos = np.empty_like(pos_sorted)
+        pos[order] = pos_sorted
+    else:
+        order = xp.argsort(e_flat)                     # stable by default
+        sorted_e = e_flat[order]
+        first = xp.searchsorted(sorted_e, sorted_e, side="left")
+        pos_sorted = xp.arange(n) - first
+        pos = xp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    keep = pos < capacity
+    dest = xp.where(keep, e_flat * capacity + pos, n_experts * capacity)
+    return pos, keep, dest
+
+
+def scatter_to_slots(dest, values, n_slots: int, fill, xp=np):
+    """Scatter ``values[i]`` to slot ``dest[i]`` over an ``n_slots + 1``
+    buffer whose last slot absorbs overflow; returns the first
+    ``n_slots`` slots.  Output dtype follows ``values``."""
+    shape = (n_slots + 1,) + tuple(values.shape[1:])
+    if xp is np:
+        out = np.full(shape, fill, dtype=values.dtype)
+        out[dest] = values
+        return out[:n_slots]
+    return xp.full(shape, fill, values.dtype).at[dest].set(values)[:n_slots]
+
+
+def normalize_gates(gate, xp=np):
+    """Top-k gate renormalization (identical formula on both paths)."""
+    return gate / xp.maximum(gate.sum(axis=-1, keepdims=True), 1e-9)

@@ -79,6 +79,9 @@ def spgemm_gather_execute(plan: SpGemmGatherPlan, a_data: np.ndarray,
     return np.asarray(_gather_execute(
         jnp.asarray(a_data), jnp.asarray(b_data),
         jnp.asarray(plan.a_idx), jnp.asarray(plan.b_idx),
+        # reaplint: disable=REAP004 plan-static shape: the sync path
+        # compiles once per cached plan; bucketing lives on the chunked
+        # path (_gather_execute_capped)
         jnp.asarray(plan.out_idx), c_nnz=plan.c_nnz))
 
 
@@ -147,11 +150,16 @@ def spgemm_block_execute(plan: SpGemmBlockPlan, a_data: np.ndarray,
             plan.schedule,
             jnp.asarray(a_blocks, jnp.float32),
             jnp.asarray(b_blocks, jnp.float32),
+            # reaplint: disable=REAP004 plan-static shape: one compile
+            # per cached plan; the chunked path buckets via
+            # bucket_block_schedule
             n_out_blocks=plan.n_out_blocks))
     return np.asarray(_block_execute_jnp(
         jnp.asarray(a_blocks, jnp.float32),
         jnp.asarray(b_blocks, jnp.float32),
         jnp.asarray(plan.a_id), jnp.asarray(plan.b_id),
+        # reaplint: disable=REAP004 plan-static shape: one compile per
+        # cached plan (sync fallback path)
         jnp.asarray(plan.out_id), n_out=plan.n_out_blocks))
 
 

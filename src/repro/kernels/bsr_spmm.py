@@ -80,6 +80,9 @@ def inspect_bsr_weight(w_dense: np.ndarray, block: int,
     assert d_in % block == 0 and d_out % block == 0
     nk, nj = d_in // block, d_out // block
     tiles = w_dense.reshape(nk, block, nj, block).transpose(0, 2, 1, 3)
+    # reaplint: disable=REAP001 this inspector CREATES the sparsity
+    # pattern (magnitude pruning of a dense weight); value-dependence is
+    # its purpose. Downstream spmm plans consume only the pattern.
     energy = np.abs(tiles).sum(axis=(2, 3)).reshape(-1)      # (nk*nj,)
     n_keep = max(nj, int(round(keep_fraction * nk * nj)))
     keep_ids = np.argsort(-energy)[:n_keep]
@@ -260,6 +263,9 @@ def spmm_execute(plan: SpmmPlan, x: np.ndarray, w_data: np.ndarray,
                        jnp.asarray(plan.j_blk, jnp.int32),
                        jnp.asarray(plan.is_first, jnp.int32),
                        jnp.asarray(plan.is_last, jnp.int32),
+                       # reaplint: disable=REAP004 plan-static shape: the
+                       # output block count is fixed per cached plan (bt,
+                       # the streamed axis, IS pow-2-bucketed)
                        n_j_blocks=plan.n_j_blocks, bt=bt,
                        interpret=jax.default_backend() != "tpu")
     else:
@@ -269,6 +275,9 @@ def spmm_execute(plan: SpmmPlan, x: np.ndarray, w_data: np.ndarray,
                                   jnp.asarray(plan.w_id),
                                   jnp.asarray(plan.k_blk),
                                   jnp.asarray(plan.j_blk),
+                                  # reaplint: disable=REAP004 plan-static
+                                  # shape: fixed per cached plan (jnp
+                                  # fallback path)
                                   n_j=plan.n_j_blocks)
         out = jnp.swapaxes(out_j, 0, 1).reshape(t_pad, plan.n_j_blocks * bs)
     return np.asarray(out)[:t, :plan.n_cols]

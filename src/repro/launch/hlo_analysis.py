@@ -30,7 +30,7 @@ def top_collectives(hlo_text: str, k: int = 15):
         rows.append((moved, m.group(2), m.group(1)[:60], g, meta))
     rows.sort(reverse=True)
     agg = defaultdict(float)
-    for moved, op, shape, g, meta in rows:
+    for moved, op, _shape, _g, meta in rows:
         key = re.sub(r"\d+", "#", meta.split("/")[-1]) if meta else op
         agg[key] += moved
     return rows[:k], sorted(agg.items(), key=lambda kv: -kv[1])[:k]

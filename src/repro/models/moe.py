@@ -20,6 +20,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..core.routing import (expert_assignment, normalize_gates,
+                            scatter_to_slots)
 from .layers import dense
 
 
@@ -41,7 +43,7 @@ def host_route(tokens, router_w, *, top_k: int
     probs /= probs.sum(axis=-1, keepdims=True)
     expert = np.argsort(-probs, axis=-1, kind="stable")[:, :top_k]
     gate = np.take_along_axis(probs, expert, axis=-1)
-    gate = gate / np.maximum(gate.sum(axis=-1, keepdims=True), 1e-9)
+    gate = normalize_gates(gate, xp=np)
     return expert.astype(np.int64), gate.astype(np.float32)
 
 
@@ -114,23 +116,17 @@ def route_and_bundle(tokens, router_w, *, n_experts: int, top_k: int,
     logits = dense(tokens.astype(jnp.float32), router_w.astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
     gate, expert = jax.lax.top_k(probs, top_k)               # (T, K)
-    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    gate = normalize_gates(gate, xp=jnp)
 
+    # capacity assignment: shared with the host inspector (core.routing)
     e_flat = expert.reshape(-1)                              # (T*K,)
-    order = jnp.argsort(e_flat)                              # stable
-    sorted_e = e_flat[order]
-    # rank within expert: index − first-occurrence index (sorted layout)
-    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
-    pos_sorted = jnp.arange(t * top_k) - first
-    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
-    keep = pos < capacity                                    # dropped = overflow
-    dest = jnp.where(keep, e_flat * capacity + pos, n_experts * capacity)
+    _, keep, dest = expert_assignment(e_flat, capacity, n_experts, xp=jnp)
 
     token_idx = jnp.repeat(jnp.arange(t), top_k)
     x_rep = tokens[token_idx]                                # (T*K, d)
-    x_bundles = jnp.zeros((n_experts * capacity + 1, d), tokens.dtype)
-    x_bundles = x_bundles.at[dest].set(
-        jnp.where(keep[:, None], x_rep, 0))[:-1]
+    x_bundles = scatter_to_slots(
+        dest, jnp.where(keep[:, None], x_rep, 0),
+        n_experts * capacity, fill=0, xp=jnp)
     x_bundles = x_bundles.reshape(n_experts, capacity, d)
 
     # load-balance auxiliary loss (Switch-style) + drop stats
@@ -185,23 +181,19 @@ def _row_dispatch(tokens, router_w, *, n_experts, top_k, capacity):
     logits = dense(tokens.astype(jnp.float32), router_w.astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)
     gate, expert = jax.lax.top_k(probs, top_k)
-    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    gate = normalize_gates(gate, xp=jnp)
 
+    # capacity assignment: shared with the host inspector (core.routing)
     e_flat = expert.reshape(-1)
-    order = jnp.argsort(e_flat)
-    sorted_e = e_flat[order]
-    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
-    pos_sorted = jnp.arange(t * top_k) - first
-    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
-    keep = pos < capacity
-    dest = jnp.where(keep, e_flat * capacity + pos, n_experts * capacity)
+    _, keep, dest = expert_assignment(e_flat, capacity, n_experts, xp=jnp)
 
     token_idx = jnp.repeat(jnp.arange(t), top_k)
     n_slots = n_experts * capacity
-    slot_token = jnp.full((n_slots + 1,), t, jnp.int32).at[dest].set(
-        token_idx.astype(jnp.int32))[:n_slots]
-    slot_gate = jnp.zeros((n_slots + 1,), jnp.float32).at[dest].set(
-        gate.reshape(-1) * keep)[:n_slots]
+    slot_token = scatter_to_slots(dest, token_idx.astype(jnp.int32),
+                                  n_slots, fill=t, xp=jnp)
+    slot_gate = scatter_to_slots(
+        dest, (gate.reshape(-1) * keep).astype(jnp.float32), n_slots,
+        fill=0.0, xp=jnp)
 
     me = probs.mean(axis=0)
     ce = jnp.zeros(n_experts, probs.dtype).at[e_flat].add(1.0) / (t * top_k)

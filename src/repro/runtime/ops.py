@@ -29,7 +29,26 @@ __all__ = [
     "OpSpec", "register_op", "unregister_op", "get_op", "list_ops",
     "register_plan_type", "plan_type", "plan_type_name",
     "serializer_for", "deserializer_for",
+    "REQUIRED_HOOKS", "ROUTER_HOOK", "EXECUTOR_HOOKS", "INSPECTOR_HOOKS",
+    "SERIALIZER_HOOKS", "VALUE_ATTRS", "PATTERN_ATTRS",
 ]
+
+# -- Machine-readable contract metadata ---------------------------------------
+# One description of the OpSpec contract, consumed by both the runtime
+# (``OpSpec.__post_init__``) and the static checker (``repro.analysis``,
+# rule REAP002) so the enforced contract and the linted contract cannot
+# drift apart.  ``repro.analysis`` loads this module standalone via its
+# file path, so ops.py must keep importing nothing beyond the stdlib.
+REQUIRED_HOOKS: Tuple[str, ...] = ("fingerprint", "inspect", "execute_sync")
+ROUTER_HOOK: str = "route"
+EXECUTOR_HOOKS: Tuple[str, ...] = ("execute_sync", "execute_chunked")
+INSPECTOR_HOOKS: Tuple[str, ...] = ("fingerprint", "inspect", "prepare")
+SERIALIZER_HOOKS: Tuple[str, ...] = ("serialize", "deserialize")
+# operand attributes that carry *values* — off-limits to inspector hooks —
+# vs. the pattern attributes plans may be built from (REAP001)
+VALUE_ATTRS: Tuple[str, ...] = ("data", "values")
+PATTERN_ATTRS: Tuple[str, ...] = (
+    "indptr", "indices", "shape", "dtype", "n_rows", "n_cols", "nnz")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,12 +135,15 @@ class OpSpec:
     allowed_kw: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
-        if self.route is None and (self.fingerprint is None
-                                   or self.inspect is None
-                                   or self.execute_sync is None):
-            raise ValueError(
-                f"op {self.tag!r} must define fingerprint+inspect+"
-                "execute_sync, or be a pure router (route=...)")
+        if getattr(self, ROUTER_HOOK) is None:
+            missing = [h for h in REQUIRED_HOOKS
+                       if getattr(self, h) is None]
+            if missing:
+                raise ValueError(
+                    f"op {self.tag!r} must define "
+                    f"{'+'.join(REQUIRED_HOOKS)} (missing: "
+                    f"{', '.join(missing)}), or be a pure router "
+                    f"({ROUTER_HOOK}=...)")
         if not self.fingerprint_ops:
             object.__setattr__(self, "fingerprint_ops", (self.tag,))
 

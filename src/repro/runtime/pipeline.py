@@ -424,9 +424,11 @@ def spgemm_block_chunked(a: CSR, b: CSR, block: int = 128, n_chunks: int = 4,
 
     bs = plan.block
 
-    def inspect_fn(k: int):
-        # emit into pow-2-bucketed tile arrays (bucket_block_schedule) so
-        # the executor sees O(log) distinct shapes across a chunk stream
+    def emit_fn(k: int):
+        # host-side *emit* stage (not inspection — it scatters operand
+        # values into RIR tiles, so it must not carry an inspect_* name):
+        # pow-2-bucketed tile arrays (bucket_block_schedule) keep the
+        # executor at O(log) distinct shapes across a chunk stream
         ch = chunkset.chunk(k)
         sched = bucket_block_schedule(ch)
         a_blocks = np.zeros((sched["a_cap"], bs, bs), np.float32)
@@ -450,7 +452,7 @@ def spgemm_block_chunked(a: CSR, b: CSR, block: int = 128, n_chunks: int = 4,
                 jnp.asarray(sched["out_id"]), n_out=n_out_cap)
         return np.asarray(out)[:ch.n_out_blocks]
 
-    results, ostats = run_overlapped(chunkset.n_chunks, inspect_fn,
+    results, ostats = run_overlapped(chunkset.n_chunks, emit_fn,
                                      execute_fn, overlap)
     c_blocks = np.concatenate(results, axis=0)
     c = block_result_to_csr(plan, c_blocks, a.n_rows, b.n_cols)
@@ -507,9 +509,10 @@ def cholesky_execute_overlapped(plan: CholeskyPlan, a_vals: np.ndarray,
 
     _, ostats = run_overlapped(len(groups), inspect_fn, execute_fn, overlap)
     vals = state[0]
-    # drain queued device work inside the timed region so the stats are
-    # comparable with the sync path (which blocks before stamping)
     t0 = time.perf_counter()
+    # reaplint: disable=REAP003 deliberate drain: queued device work is
+    # blocked on inside the timed region so the stats stay comparable
+    # with the sync path (which blocks before stamping)
     vals.block_until_ready()
     drain = time.perf_counter() - t0
     execute_s = ostats.execute_s + drain
