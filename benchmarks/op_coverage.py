@@ -15,11 +15,19 @@ from typing import Dict, List
 
 from repro.analysis.op_examples import builtin_examples
 from repro.runtime import ReapRuntime, get_op, list_ops
+from repro.runtime.ops import capability_summary
 
 
 def concrete_ops() -> List[str]:
     """Registered tags that own plans (routers resolve to these)."""
     return [tag for tag in list_ops() if get_op(tag).route is None]
+
+
+def _caps(tag: str) -> Dict:
+    """Declared capability metadata for a tag, JSON-friendly."""
+    cap = capability_summary(get_op(tag))
+    return dict(dtypes=list(cap["dtypes"]), routing=cap["routing"],
+                chunked=cap["chunked"])
 
 
 def per_op_breakdown(reduced: bool = False, verbose: bool = True) -> dict:
@@ -39,7 +47,8 @@ def per_op_breakdown(reduced: bool = False, verbose: bool = True) -> dict:
         rt.run(tag, *ex.operands(0), **ex.kw)      # miss (cold)
         rt.run(tag, *ex.operands(1), **ex.kw)      # hit (same pattern)
         covered.append(tag)
-    per_op = {tag: rec for tag, rec in rt.cache_stats()["per_op"].items()
+    per_op = {tag: dict(rec, capabilities=_caps(tag))
+              for tag, rec in rt.cache_stats()["per_op"].items()
               if tag in covered}
     ok = not skipped and all(rec["hits"] >= 1 and rec["misses"] >= 1
                              for rec in per_op.values())
@@ -86,13 +95,17 @@ def per_op_warm_rows(n: int = 384, repeats: int = 3, verbose: bool = True,
             warm_s.append(time.perf_counter() - t0)
             hit = hit and st["cache_hit"]
         warm = min(warm_s)
+        caps = _caps(tag)
         rows.append(dict(bench=f"{prefix}_per_op", op=tag, n=n,
                          cold_s=cold_s, warm_s=warm,
                          speedup=cold_s / max(warm, 1e-9), ok=hit,
-                         skipped=False))
+                         skipped=False, capabilities=caps))
         if verbose:
             print(f"{prefix}_per_op,{tag},cold_ms={cold_s * 1e3:.1f},"
                   f"warm_ms={warm * 1e3:.1f},"
                   f"speedup={cold_s / max(warm, 1e-9):.2f},"
-                  f"{'hit' if hit else 'MISS(!)'}")
+                  f"{'hit' if hit else 'MISS(!)'},"
+                  f"dtypes={'|'.join(caps['dtypes'])},"
+                  f"routing={caps['routing']}"
+                  f"{'+chunked' if caps['chunked'] else ''}")
     return rows

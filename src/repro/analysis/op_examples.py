@@ -67,6 +67,10 @@ def builtin_examples(n: int = 384) -> Dict[str, OpExample]:
     spd = random_spd_csr(n // 2, 0.02, prng)
     w_pat = random_csr(n, n, 0.02, prng, "blocky")
     expert_ids = prng.integers(0, 8, (n, 2))
+    # block_attention wants a fixed power-of-two-friendly seq; keep it
+    # independent of ``n`` so the mask stays a few q/kv blocks at block=64
+    attn_seq = 256
+    attn_mask = random_csr(attn_seq, attn_seq, 0.03, prng, "blocky")
 
     def gather_ops(seed: int):
         rng = np.random.default_rng(seed)
@@ -91,6 +95,18 @@ def builtin_examples(n: int = 384) -> Dict[str, OpExample]:
         x = rng.standard_normal((32, n)).astype(np.float32)
         return x, _revalue(w_pat, rng)
 
+    def attn_ops(seed: int):
+        rng = np.random.default_rng(seed)
+        q = rng.standard_normal((1, 2, attn_seq, 32)).astype(np.float32)
+        k = rng.standard_normal((1, 2, attn_seq, 32)).astype(np.float32)
+        v = rng.standard_normal((1, 2, attn_seq, 32)).astype(np.float32)
+        return q, k, v, _revalue(attn_mask, rng)
+
+    def spmv_ops(seed: int):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal(spd.n_cols)
+        return _revalue(spd, rng), x
+
     examples = [
         OpExample("spgemm_gather", gather_ops),
         OpExample("spgemm_block", block_ops,
@@ -98,6 +114,10 @@ def builtin_examples(n: int = 384) -> Dict[str, OpExample]:
         OpExample("cholesky", spd_ops, kw=dict(dtype=jnp.float32)),
         OpExample("moe_dispatch", moe_ops, kw=dict(n_experts=8)),
         OpExample("spmm", spmm_ops,
+                  runtime_kw=dict(use_pallas=False, block=64)),
+        OpExample("block_attention", attn_ops,
+                  runtime_kw=dict(use_pallas=False, block=64)),
+        OpExample("spmv", spmv_ops,
                   runtime_kw=dict(use_pallas=False, block=64)),
     ]
     return {ex.tag: ex for ex in examples}

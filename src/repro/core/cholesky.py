@@ -174,7 +174,8 @@ def cholesky_baseline_numpy(plan: CholeskyPlan, a_vals: np.ndarray
 # separate chunked hook.
 
 from .inspector import fingerprint_pattern  # noqa: E402
-from repro.runtime.ops import OpSpec, register_op  # noqa: E402
+from repro.runtime.ops import (OpCapabilities, OpSpec,  # noqa: E402
+                               register_op)
 
 
 def _fp_cholesky(operands, cfg, *, chunked, **kw):
@@ -206,4 +207,6 @@ register_op(OpSpec(
     execute_sync=_exec_cholesky,
     plan_types={"cholesky": CholeskyPlan},
     allowed_kw=("dtype",),
+    capabilities=OpCapabilities(dtypes=("float32", "float64"),
+                                routing="host"),
 ))

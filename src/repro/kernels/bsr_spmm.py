@@ -202,10 +202,10 @@ class SpmmPlan:
             "is_first": self.is_first.astype(np.int32),
             "is_last": self.is_last.astype(np.int32)})
 
-    def scatter(self, w_data: np.ndarray) -> np.ndarray:
+    def scatter(self, w_data: np.ndarray, dtype=np.float32) -> np.ndarray:
         """Value pass: W's CSR values → (n_blocks + 1, bs, bs) MXU tiles
         (the trailing tile is the zero operand of coverage jobs)."""
-        tiles = self.pat.scatter(w_data)
+        tiles = self.pat.scatter(w_data, dtype=dtype)
         return np.concatenate(
             [tiles, np.zeros((1, self.block, self.block), tiles.dtype)])
 
@@ -233,30 +233,36 @@ def _spmm_execute_jnp(x_tiles, w_tiles, w_id, k_blk, j_blk, n_j: int):
     """jnp fallback executor: per-job tile dots + segment-sum over output
     block-columns (jobs are sorted by ``j_blk``)."""
     prods = jnp.einsum("tij,tjk->tik", x_tiles[k_blk], w_tiles[w_id],
-                       preferred_element_type=jnp.float32)
+                       preferred_element_type=x_tiles.dtype)
     return jax.ops.segment_sum(prods, j_blk, num_segments=n_j,
                                indices_are_sorted=True)
 
 
 def spmm_execute(plan: SpmmPlan, x: np.ndarray, w_data: np.ndarray,
-                 use_pallas: bool = True) -> np.ndarray:
+                 use_pallas: bool = True, dtype=np.float32) -> np.ndarray:
     """Y = X @ W from a plan + this call's values.  Returns (T, d_out).
 
     T is bucketed to a power of two (and X zero-padded to W's padded
     row count) so a stream of differently sized activation batches costs
     O(log) executor compiles — the RIR static-shape discipline.
+
+    ``dtype`` picks the value dtype of the whole pass (plans are
+    value-free, so it never touches the fingerprint).  The Pallas MXU
+    path accumulates in float32 by design; wider dtypes (the planned
+    solver's float64 matvecs) route through the jnp executor.
     """
-    x = np.asarray(x, np.float32)
+    dtype = np.dtype(dtype)
+    x = np.asarray(x, dtype)
     t, d_in = x.shape
     if d_in != plan.n_rows:
         raise ValueError(f"x has {d_in} features, W has {plan.n_rows} rows")
     bs = plan.block
     t_pad = next_pow2(max(1, t))
     bt = min(128, t_pad)
-    xp = np.zeros((t_pad, plan.pat.n_rows), np.float32)
+    xp = np.zeros((t_pad, plan.pat.n_rows), dtype)
     xp[:t, :d_in] = x
-    w_tiles = plan.scatter(w_data)
-    if use_pallas:
+    w_tiles = plan.scatter(w_data, dtype=dtype)
+    if use_pallas and dtype == np.float32:
         out = bsr_spmm(jnp.asarray(xp), jnp.asarray(w_tiles),
                        jnp.asarray(plan.w_id, jnp.int32),
                        jnp.asarray(plan.k_blk, jnp.int32),
@@ -293,7 +299,7 @@ def spmm_ref_numpy(x: np.ndarray, w: CSR) -> np.ndarray:
 # integration with the runtime, cache, store, serve and benchmarks.
 # ---------------------------------------------------------------------------
 
-from repro.runtime.ops import OpSpec, register_op  # noqa: E402
+from repro.runtime.ops import OpCapabilities, OpSpec, register_op  # noqa: E402
 
 
 def _fp_spmm(operands, cfg, *, chunked, **kw):
@@ -305,10 +311,10 @@ def _inspect_spmm(operands, cfg, fp, **kw):
     return inspect_spmm(operands[1], cfg.block, fp)
 
 
-def _exec_spmm(plan, operands, cfg, *, overlap, **kw):
+def _exec_spmm(plan, operands, cfg, *, overlap, dtype=np.float32, **kw):
     x, w = operands
     t0 = time.perf_counter()
-    y = spmm_execute(plan, x, w.data, use_pallas=cfg.use_pallas)
+    y = spmm_execute(plan, x, w.data, use_pallas=cfg.use_pallas, dtype=dtype)
     exec_s = time.perf_counter() - t0
     stats = dict(method="spmm", execute_s=exec_s, overlap=False,
                  n_jobs=plan.n_jobs, fill=plan.pat.fill,
@@ -322,5 +328,7 @@ register_op(OpSpec(
     inspect=_inspect_spmm,
     execute_sync=_exec_spmm,
     plan_types={"spmm": SpmmPlan, "bsr_pattern": BsrPattern},
-    allowed_kw=(),
+    allowed_kw=("dtype",),
+    capabilities=OpCapabilities(dtypes=("float32", "float64"),
+                                routing="host"),
 ))

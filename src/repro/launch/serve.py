@@ -91,6 +91,26 @@ def _store_op_report(rt) -> str:
     return " ".join(parts) if parts else "none"
 
 
+def _capability_report() -> str:
+    """One line per registered op from its declared capability metadata.
+
+    Enumerated from ``list_ops()`` + ``capability_summary`` so newly
+    admitted ops show up here with zero serve edits; routers own no
+    plans and are marked as such instead of echoing capabilities."""
+    from repro.runtime.ops import capability_summary, get_op, list_ops
+    lines = []
+    for tag in list_ops():
+        spec = get_op(tag)
+        if spec.route is not None:
+            lines.append(f"  {tag}: (router)")
+            continue
+        cap = capability_summary(spec)
+        chunk = "+chunked" if cap["chunked"] else ""
+        lines.append(f"  {tag}: [{','.join(cap['dtypes'])}] "
+                     f"{cap['routing']}{chunk}")
+    return "\n".join(lines)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, default="gemma2-2b")
@@ -125,6 +145,8 @@ def main(argv=None):
             print(f"[serve] plan store {args.plan_store}: {s['entries']} "
                   f"warm plans ({_store_op_report(rt)}), "
                   f"{s['bytes'] / 1e6:.2f} MB on disk")
+        print("[serve] registered ops (dtypes/routing, registry-enumerated):")
+        print(_capability_report())
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -26,11 +26,13 @@ import threading
 from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 __all__ = [
-    "OpSpec", "register_op", "unregister_op", "get_op", "list_ops",
+    "OpSpec", "OpCapabilities", "capability_summary",
+    "register_op", "unregister_op", "get_op", "list_ops",
     "register_plan_type", "plan_type", "plan_type_name",
     "serializer_for", "deserializer_for",
     "REQUIRED_HOOKS", "ROUTER_HOOK", "EXECUTOR_HOOKS", "INSPECTOR_HOOKS",
     "SERIALIZER_HOOKS", "VALUE_ATTRS", "PATTERN_ATTRS",
+    "CAPABILITY_ROUTINGS",
 ]
 
 # -- Machine-readable contract metadata ---------------------------------------
@@ -49,6 +51,57 @@ SERIALIZER_HOOKS: Tuple[str, ...] = ("serialize", "deserialize")
 VALUE_ATTRS: Tuple[str, ...] = ("data", "values")
 PATTERN_ATTRS: Tuple[str, ...] = (
     "indptr", "indices", "shape", "dtype", "n_rows", "n_cols", "nnz")
+# where an op's dispatch decision runs: "host" = the inspector plans on
+# the host and the executor is launched from host code (the common REAP
+# shape); "in_graph" = the op also ships a traced/jitted routing variant
+# that lives inside a compiled graph (e.g. moe_dispatch's in-graph twin)
+CAPABILITY_ROUTINGS: Tuple[str, ...] = ("host", "in_graph")
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCapabilities:
+    """Declarative per-op capability metadata (pure data, no behavior).
+
+    Enumeration layers — ``serve.py``'s registry report, the benchmark
+    per-op rows, the conformance suite — consume this via
+    :func:`capability_summary` so they can annotate and scope per-op
+    checks without hard-coding tag lists.
+
+    ``dtypes``
+        Value dtype names the executors accept for operand *values*
+        (plans are value-free, so this never enters a fingerprint).
+
+    ``routing``
+        One of :data:`CAPABILITY_ROUTINGS` — whether dispatch decisions
+        run on the host only or the op also has an in-graph variant.
+
+    Chunked-executor availability is deliberately *derived*, never
+    declared: ``spec.execute_chunked is not None`` is the ground truth
+    and :func:`capability_summary` reports it, so the metadata cannot
+    drift from the hooks actually registered.
+    """
+
+    dtypes: Tuple[str, ...] = ("float32",)
+    routing: str = "host"
+
+    def __post_init__(self):
+        if self.routing not in CAPABILITY_ROUTINGS:
+            raise ValueError(
+                f"unknown routing {self.routing!r}; expected one of "
+                f"{CAPABILITY_ROUTINGS}")
+        if not self.dtypes:
+            raise ValueError("capabilities must declare at least one dtype")
+
+
+def capability_summary(spec: "OpSpec") -> Dict[str, object]:
+    """Flat capability dict for one spec (the reporting contract).
+
+    ``{"dtypes": (...), "routing": "host"|"in_graph", "chunked": bool}``;
+    routers report their own declared metadata with ``chunked=False``.
+    """
+    cap = spec.capabilities
+    return dict(dtypes=tuple(cap.dtypes), routing=cap.routing,
+                chunked=spec.execute_chunked is not None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +172,12 @@ class OpSpec:
         per-op methods had before the registry — a typo'd ``dtyp=`` must
         not silently fall into a ``**kw`` sink).  ``None`` (default)
         skips validation, for user ops with open-ended hooks.
+
+    ``capabilities``
+        :class:`OpCapabilities` metadata (supported value dtypes,
+        host-vs-in-graph routing).  Pure annotation: the dispatcher never
+        branches on it; reporting layers read it via
+        :func:`capability_summary`.
     """
 
     tag: str
@@ -133,6 +192,8 @@ class OpSpec:
     plan_types: Mapping[str, type] = dataclasses.field(default_factory=dict)
     fingerprint_ops: Tuple[str, ...] = ()
     allowed_kw: Optional[Tuple[str, ...]] = None
+    capabilities: OpCapabilities = dataclasses.field(
+        default_factory=OpCapabilities)
 
     def __post_init__(self):
         if getattr(self, ROUTER_HOOK) is None:
@@ -161,7 +222,8 @@ def _ensure_builtin_ops() -> None:
     """Import the modules hosting the built-in registrations (lazy, once).
 
     Registrations live next to their kernels (`core/spgemm.py`,
-    `core/cholesky.py`, `core/inspector.py`, `kernels/bsr_spmm.py`,
+    `core/cholesky.py`, `core/inspector.py`, `core/solver.py`,
+    `kernels/bsr_spmm.py`, `kernels/flash_attention.py`,
     `runtime/pipeline.py` for the chunk-set plan types); importing any of
     them registers their ops as a side effect, and this hook makes the
     registry complete regardless of which module the process touched
@@ -182,6 +244,8 @@ def _ensure_builtin_ops() -> None:
         import repro.core.cholesky         # noqa: F401  cholesky
         import repro.runtime.pipeline      # noqa: F401  chunk-set plan types
         import repro.kernels.bsr_spmm      # noqa: F401  spmm
+        import repro.kernels.flash_attention  # noqa: F401  block_attention
+        import repro.core.solver           # noqa: F401  spmv
         _BUILTINS_LOADED = True
 
 
