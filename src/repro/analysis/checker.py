@@ -97,6 +97,12 @@ class ParsedFile:
                 roles.add("inspector")
             if _rules.EXEC_NAME_RE.search(node.name):
                 roles.add("executor")
+            # decode hot loops in sync-scoped modules (the serve scheduler)
+            # carry the executor sync-hygiene contract (REAP003)
+            p = self.path.replace("\\", "/")
+            if any(p.endswith(m) for m in _rules.SYNC_SCOPE_MODULES) \
+                    and _rules.HOT_LOOP_NAME_RE.search(node.name):
+                roles.add("executor")
             if roles:
                 out.append(FuncInfo(node, node.name, roles,
                                     _rules.is_jitted(node)))

@@ -59,6 +59,12 @@ META_OF_VALUE_ATTRS = ("dtype", "shape", "nbytes", "size", "ndim")
 PROTECTED_TAG_MODULES = (
     "runtime/api.py", "runtime/plan_cache.py", "runtime/plan_store.py")
 SYNC_CALL_ROOTS = ("jax", "jnp")
+# modules whose decode-hot-loop functions carry the REAP003 sync-hygiene
+# contract even though they are not OpSpec executors: the serve scheduler's
+# step loop must not sync the device except the single audited token drain
+# (suppressed inline with a reason)
+SYNC_SCOPE_MODULES = ("launch/scheduler.py",)
+HOT_LOOP_NAME_RE = re.compile(r"(^|_)(step|decode)(_|$)")
 
 
 # -- small AST helpers --------------------------------------------------------

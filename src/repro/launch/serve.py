@@ -1,13 +1,22 @@
-"""Serving driver: batched prefill + decode with KV caches.
+"""Serving driver: one-shot batch generation or a continuous-batching loop.
+
+One-shot (fixed batch, every row same prompt length and gen):
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
         --batch 4 --prompt-len 32 --gen 32
 
+Continuous batching (trace-driven scheduler, per-request lengths, KV-cache
+request slots — see ``launch/scheduler.py``):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch dbrx-132b --reduced \
+        --continuous --requests 16 --max-batch 4 --host-moe
+
 MoE architectures can route decode-step expert dispatch through the
-process's shared ReapRuntime (``--host-moe``): each decode step's routing
-pattern goes through the registered ``moe_dispatch`` op, so repeated
-routings hit warm bundling plans and — with ``--plan-store`` — server
-restarts reuse the plans a previous process inspected.
+process's shared ReapRuntime (``--host-moe``): the decode step stays jitted
+and only the routing pattern crosses to the host via ``jax.pure_callback``
+into the registered ``moe_dispatch`` op, so repeated per-token routings hit
+warm bundling plans and — with ``--plan-store`` — server restarts reuse the
+plans a previous process inspected.
 """
 from __future__ import annotations
 
@@ -27,20 +36,24 @@ def generate(cfg, params, tokens, *, gen: int, max_seq: int,
              host_moe: bool = False):
     """Greedy/temperature sampling. tokens: (B, prompt_len) int32.
 
-    ``host_moe`` runs decode steps eagerly (un-jitted) so MoE layers see
-    concrete arrays and route dispatch through the installed runtime (see
-    ``models.moe.set_host_dispatch_runtime``); prefill stays jitted — its
-    traced MoE keeps the in-graph path.
+    Decode steps are always jitted.  When a host runtime is installed
+    (``models.moe.set_host_dispatch_runtime``), the compiled decode step's
+    MoE layers route their slot destinations through a ``jax.pure_callback``
+    into the registry's ``moe_dispatch`` op — warm plans are hit from
+    *inside* compiled code, with no eager unroll.  ``host_moe`` is kept for
+    API compatibility; it no longer changes the decode path.
     """
+    del host_moe  # runtime installation alone selects the callback path
+
     def decode_fn(p, c, t, pos):
         return M.decode_step(cfg, p, c, t, pos)
 
     b, prompt_len = tokens.shape
+    decode = jax.jit(decode_fn)
     if cfg.enc_dec:
         cache = M.init_cache(cfg, b, max_seq, s_enc=frames.shape[1])
         _, cache = M.encdec_prefill(cfg, params, frames, cache)
         # consume the prompt token by token (decoder side)
-        decode = decode_fn if host_moe else jax.jit(decode_fn)
         logits = None
         for i in range(prompt_len):
             logits, cache = decode(params, cache, tokens[:, i:i + 1],
@@ -50,7 +63,6 @@ def generate(cfg, params, tokens, *, gen: int, max_seq: int,
         prefill = jax.jit(lambda p, t, c: M.prefill(cfg, p, t, c))
         logits, cache = prefill(params, tokens, cache)
         logits = logits[:, -1:]
-        decode = decode_fn if host_moe else jax.jit(decode_fn)
 
     key = jax.random.PRNGKey(seed)
     out = [tokens]
@@ -111,6 +123,43 @@ def _capability_report() -> str:
     return "\n".join(lines)
 
 
+def serve_continuous(cfg, args, rt):
+    """Trace-driven continuous-batching serve (the scheduler front end)."""
+    from repro.launch.scheduler import ServeScheduler, synthetic_trace
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    trace = synthetic_trace(args.requests, seed=args.seed,
+                            vocab=cfg.vocab_size)
+    streamed = [0]
+
+    def on_token(rid, token, step):
+        streamed[0] += 1
+
+    sch = ServeScheduler(cfg, params, max_batch=args.max_batch,
+                         max_seq=args.max_seq,
+                         token_budget=args.token_budget, on_token=on_token)
+    t0 = time.time()
+    completions = sch.run(trace)
+    total = time.time() - t0
+    new_tokens = sum(len(c.tokens) for c in completions)
+    print(f"[serve] continuous: {len(completions)}/{args.requests} requests"
+          f" in {sch.stats['steps']} steps ({sch.stats['decode_steps']} "
+          f"decode), {new_tokens} tokens in {total:.2f}s "
+          f"({new_tokens / total:.1f} tok/s), {streamed[0]} streamed")
+    occupancy = M.cache_slot_occupancy(sch.cache)
+    if occupancy.any():
+        raise SystemExit(f"[serve] ERROR: drained scheduler left orphaned "
+                         f"KV slots: {occupancy.tolist()}")
+    if args.expect_completions is not None:
+        if len(completions) != args.expect_completions or streamed[0] == 0:
+            raise SystemExit(
+                f"[serve] ERROR: expected {args.expect_completions} "
+                f"completions with streamed tokens, got "
+                f"{len(completions)} / {streamed[0]} streamed")
+        print(f"[serve] smoke OK: {args.expect_completions} completions, "
+              f"{streamed[0]} streamed tokens, no orphaned slots")
+    return completions
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, default="gemma2-2b")
@@ -120,6 +169,24 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a synthetic request trace through the "
+                         "continuous-batching scheduler instead of one "
+                         "fixed batch (per-request prompt/gen lengths, "
+                         "KV-cache slot reuse, per-step streaming)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="[--continuous] trace length")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="[--continuous] decode slots (KV-cache rows)")
+    ap.add_argument("--max-seq", type=int, default=64,
+                    help="[--continuous] per-slot cache length")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="[--continuous] admission budget in resident "
+                         "tokens (prompt+gen per in-flight request)")
+    ap.add_argument("--expect-completions", type=int, default=None,
+                    help="[--continuous] exit nonzero unless exactly this "
+                         "many requests complete with streamed output "
+                         "(CI smoke gate)")
     ap.add_argument("--plan-store", default=None, metavar="DIR",
                     help="attach a persistent plan store to this process's "
                          "shared ReapRuntime (repro.runtime.default_runtime)"
@@ -130,9 +197,10 @@ def main(argv=None):
                          "dispatch actually routes through the runtime")
     ap.add_argument("--host-moe", action="store_true",
                     help="route decode-step MoE dispatch through the "
-                         "runtime's registered moe_dispatch op (decode "
-                         "runs eagerly; prefill stays jitted in-graph). "
-                         "Repeated routings hit warm bundling plans; with "
+                         "runtime's registered moe_dispatch op via "
+                         "jax.pure_callback — decode stays jitted; only "
+                         "the routing pattern leaves the graph. Repeated "
+                         "per-token routings hit warm bundling plans; with "
                          "--plan-store they survive restarts")
     args = ap.parse_args(argv)
 
@@ -152,43 +220,41 @@ def main(argv=None):
     if args.reduced:
         cfg = reduced_config(cfg)
     host_moe = args.host_moe
+    if host_moe and cfg.ffn != "moe":
+        # no MoE layers → nothing to route through the runtime
+        print(f"[serve] note: --host-moe has no effect on {args.arch} "
+              "(no MoE layers)")
+        host_moe = False
     if host_moe:
-        if cfg.ffn != "moe":
-            # no MoE layers → nothing to route; keep decode jitted rather
-            # than silently paying eager per-token dispatch for nothing
-            print(f"[serve] note: --host-moe has no effect on {args.arch} "
-                  "(no MoE layers); decode stays jitted")
-            host_moe = False
-        elif cfg.scan_layers:
-            # lax.scan traces its body even outside jit, which would hide
-            # concrete activations from the host router; unroll the layer
-            # loop so eager decode steps reach the runtime
-            import dataclasses
-            cfg = dataclasses.replace(cfg, scan_layers=False)
-    if host_moe:
+        # decode stays fully jitted (scan_layers included): the MoE decode
+        # branch hops to the host through pure_callback for dest only
         from repro.models.moe import set_host_dispatch_runtime
         set_host_dispatch_runtime(rt)
-    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size,
-                                      (args.batch, args.prompt_len)),
-                         jnp.int32)
-    frames = None
-    if cfg.enc_dec:
-        frames = jnp.asarray(rng.standard_normal(
-            (args.batch, args.prompt_len, cfg.d_frame)), jnp.float32)
-    max_seq = args.prompt_len + args.gen + 1
-    t0 = time.time()
-    seqs, lat = generate(cfg, params, tokens, gen=args.gen, max_seq=max_seq,
-                         temperature=args.temperature, seed=args.seed,
-                         frames=frames, host_moe=host_moe)
-    total = time.time() - t0
-    print(f"[serve] {args.batch} seqs × {args.gen} new tokens in {total:.2f}s"
-          f" ({args.batch * args.gen / total:.1f} tok/s)")
-    if lat:
-        print(f"[serve] decode latency p50={np.median(lat) * 1e3:.1f}ms "
-              f"p99={np.percentile(lat, 99) * 1e3:.1f}ms")
-    print("[serve] first sequence:", np.asarray(seqs[0])[:16], "...")
+    if args.continuous:
+        seqs = serve_continuous(cfg, args, rt)
+    else:
+        params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+        rng = np.random.default_rng(args.seed)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                          (args.batch, args.prompt_len)),
+                             jnp.int32)
+        frames = None
+        if cfg.enc_dec:
+            frames = jnp.asarray(rng.standard_normal(
+                (args.batch, args.prompt_len, cfg.d_frame)), jnp.float32)
+        max_seq = args.prompt_len + args.gen + 1
+        t0 = time.time()
+        seqs, lat = generate(cfg, params, tokens, gen=args.gen,
+                             max_seq=max_seq, temperature=args.temperature,
+                             seed=args.seed, frames=frames,
+                             host_moe=host_moe)
+        total = time.time() - t0
+        print(f"[serve] {args.batch} seqs × {args.gen} new tokens in "
+              f"{total:.2f}s ({args.batch * args.gen / total:.1f} tok/s)")
+        if lat:
+            print(f"[serve] decode latency p50={np.median(lat) * 1e3:.1f}ms "
+                  f"p99={np.percentile(lat, 99) * 1e3:.1f}ms")
+        print("[serve] first sequence:", np.asarray(seqs[0])[:16], "...")
     if host_moe:
         from repro.models.moe import set_host_dispatch_runtime
         set_host_dispatch_runtime(None)
@@ -205,7 +271,8 @@ def main(argv=None):
         if active:
             print("[serve] per-op:", " ".join(
                 f"{tag}[h={rec['hits']},s={rec['store_hits']},"
-                f"m={rec['misses']}]" for tag, rec in sorted(active.items())))
+                f"m={rec['misses']},warm={rec['warm_rate']:.2f}]"
+                for tag, rec in sorted(active.items())))
         elif rt.store is not None:
             print("[serve] note: no sparse op consulted the runtime this "
                   "run — the jitted decode path routes in-graph; pass "

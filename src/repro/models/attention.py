@@ -131,8 +131,10 @@ def decode_attention(q, k_cache, v_cache, slot_pos, pos, spec: AttnSpec):
     """Single-token attention against a (possibly ring) KV cache.
 
     q: (B, H, 1, D); caches: (B, Hkv, S_cache, D); ``slot_pos``: (S_cache,)
-    absolute position stored in each cache slot (-1 = empty; ring caches
-    overwrite slots mod window, so slot index ≠ position); pos: () scalar.
+    or per-row (B, S_cache) absolute position stored in each cache slot
+    (-1 = empty; ring caches overwrite slots mod window, so slot index ≠
+    position); ``pos``: () scalar or per-row (B,) — continuous-batching
+    serve slots decode at independent positions.
     """
     b, h, _, d = q.shape
     hkv = k_cache.shape[1]
@@ -144,10 +146,13 @@ def decode_attention(q, k_cache, v_cache, slot_pos, pos, spec: AttnSpec):
                    preferred_element_type=jnp.float32) * scale
     if spec.softcap > 0:
         s = softcap(s, spec.softcap)
+    s_cache = k_cache.shape[2]
+    slot_pos = jnp.broadcast_to(slot_pos, (b, s_cache))
+    pos = jnp.broadcast_to(pos, (b,))[:, None]
     valid = (slot_pos >= 0) & (slot_pos <= pos)
     if spec.window > 0:
         valid &= slot_pos > pos - spec.window
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     s = s - s.max(axis=-1, keepdims=True)
     p = jnp.exp(s)
     p = p / p.sum(axis=-1, keepdims=True)

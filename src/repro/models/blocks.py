@@ -205,7 +205,10 @@ def attn_make_cache(cfg, layer_type, batch, max_seq, dtype):
     return {
         "k": jnp.zeros((batch, hkv, s_cache, dh), dtype),
         "v": jnp.zeros((batch, hkv, s_cache, dh), dtype),
-        "slot_pos": jnp.full((s_cache,), -1, jnp.int32),
+        # per-row slot→position map: serve slots are independent requests
+        # at independent positions (continuous batching), so validity is
+        # tracked per batch row, not per cache
+        "slot_pos": jnp.full((batch, s_cache), -1, jnp.int32),
     }
 
 
@@ -219,23 +222,53 @@ def attn_prefill(cfg, p, x, positions, layer_type, cache):
     if s_cache >= s:
         kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=2)
         vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=2)
-        slot_pos = jax.lax.dynamic_update_slice_in_dim(
-            cache["slot_pos"], positions[0].astype(jnp.int32), 0, axis=0)
+        slot_pos = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], positions.astype(jnp.int32), (0, 0))
     else:      # ring: keep the last s_cache tokens, slot = pos % s_cache
         tail = s - s_cache
         k_t = jax.lax.dynamic_slice_in_dim(k, tail, s_cache, axis=2)
         v_t = jax.lax.dynamic_slice_in_dim(v, tail, s_cache, axis=2)
-        pos_t = jax.lax.dynamic_slice_in_dim(positions[0], tail, s_cache, 0)
-        slot = (pos_t % s_cache).astype(jnp.int32)
-        kc = cache["k"].at[:, :, slot].set(k_t)
-        vc = cache["v"].at[:, :, slot].set(v_t)
-        slot_pos = cache["slot_pos"].at[slot].set(pos_t.astype(jnp.int32))
+        pos_t = jax.lax.dynamic_slice_in_dim(positions, tail, s_cache,
+                                             axis=1).astype(jnp.int32)
+        slot = (pos_t % s_cache).astype(jnp.int32)       # (B, s_cache)
+
+        def ring_row(kc_r, vc_r, sp_r, k_r, v_r, sl_r, pt_r):
+            return (kc_r.at[:, sl_r].set(k_r), vc_r.at[:, sl_r].set(v_r),
+                    sp_r.at[sl_r].set(pt_r))
+        kc, vc, slot_pos = jax.vmap(ring_row)(
+            cache["k"], cache["v"], cache["slot_pos"], k_t, v_t, slot, pos_t)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
     return dense(out, p["wo"]), {"k": kc, "v": vc, "slot_pos": slot_pos}
 
 
+def _decode_pos_vec(pos, b):
+    """Normalize a decode position — () scalar or per-row (B,) — to (B,)
+    int32.  Scalar callers (one-shot batch decode) broadcast; the
+    continuous-batching scheduler passes a vector (slots decode at
+    independent positions)."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+
+
+def _cache_token_write(cache, k, v, pos):
+    """Write this step's K/V at each row's slot (``pos % s_cache``, the
+    ring discipline) and stamp the per-row slot→position map.
+
+    k/v: (B, Hkv, 1, D); pos: (B,) int32.  Returns (kc, vc, slot_pos).
+    """
+    b = k.shape[0]
+    s_cache = cache["k"].shape[2]
+    slot = (pos % s_cache).astype(jnp.int32)                 # (B,)
+
+    def write_row(kc_r, vc_r, k_r, v_r, sl):
+        return (jax.lax.dynamic_update_slice_in_dim(kc_r, k_r, sl, axis=1),
+                jax.lax.dynamic_update_slice_in_dim(vc_r, v_r, sl, axis=1))
+    kc, vc = jax.vmap(write_row)(cache["k"], cache["v"], k, v, slot)
+    slot_pos = cache["slot_pos"].at[jnp.arange(b), slot].set(pos)
+    return kc, vc, slot_pos
+
+
 def attn_decode(cfg, p, x_t, cache, pos, layer_type):
-    """x_t: (B, 1, d); cache k/v: (B, Hkv, S_cache, D); pos: scalar."""
+    """x_t: (B, 1, d); cache k/v: (B, Hkv, S_cache, D); pos: () or (B,)."""
     b = x_t.shape[0]
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     q = dense(x_t, p["wq"]).reshape(b, 1, h, dh)
@@ -245,16 +278,12 @@ def attn_decode(cfg, p, x_t, cache, pos, layer_type):
         q = rms_norm(q, p["q_norm"])
         k = rms_norm(k, p["k_norm"])
     theta = _theta(cfg, layer_type)
-    pos_arr = jnp.full((b, 1, 1), pos)
+    pos = _decode_pos_vec(pos, b)
+    pos_arr = pos[:, None, None]
     q = rotary(q.transpose(0, 2, 1, 3), pos_arr, theta=theta)
     k = rotary(k.transpose(0, 2, 1, 3), pos_arr, theta=theta)
     v = v.transpose(0, 2, 1, 3)
-    s_cache = cache["k"].shape[2]
-    slot = (pos % s_cache).astype(jnp.int32)
-    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
-    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
-    slot_pos = jax.lax.dynamic_update_slice_in_dim(
-        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    kc, vc, slot_pos = _cache_token_write(cache, k, v, pos)
     spec = _attn_spec(cfg, layer_type)
     out = decode_attention(q, kc, vc, slot_pos, pos, spec)
     out = out.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
@@ -431,16 +460,12 @@ def _attn_decode_heads(cfg, p, x_t, cache, pos, layer_type):
         q = rms_norm(q, p["q_norm"])
         k = rms_norm(k, p["k_norm"])
     theta = _theta(cfg, layer_type)
-    pos_arr = jnp.full((b, 1, 1), pos)
+    pos = _decode_pos_vec(pos, b)
+    pos_arr = pos[:, None, None]
     q = rotary(q.transpose(0, 2, 1, 3), pos_arr, theta=theta)
     k = rotary(k.transpose(0, 2, 1, 3), pos_arr, theta=theta)
     v = v.transpose(0, 2, 1, 3)
-    s_cache = cache["k"].shape[2]
-    slot = (pos % s_cache).astype(jnp.int32)
-    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
-    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
-    slot_pos = jax.lax.dynamic_update_slice_in_dim(
-        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    kc, vc, slot_pos = _cache_token_write(cache, k, v, pos)
     spec = _attn_spec(cfg, layer_type)
     out = decode_attention(q, kc, vc, slot_pos, pos, spec)
     out = out.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)

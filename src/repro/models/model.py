@@ -246,9 +246,17 @@ def init_cache(cfg, batch: int, max_seq: int, *, s_enc: int = 0):
 
 
 def decode_step(cfg, params, cache, token, pos):
-    """token: (B, 1) int32; pos: () int32. Returns (logits, new_cache)."""
+    """token: (B, 1) int32; pos: () int32 or per-row (B,) int32.
+
+    A scalar ``pos`` decodes the whole batch at one position (the one-shot
+    batch path); a vector decodes every batch row at its own position —
+    continuous batching, where each row is an independent request slot.
+    Returns (logits, new_cache)."""
     x = _embed_in(cfg, params, token)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (token.shape[0],))
     if cfg.enc_dec:
+        # enc-dec serving is one-shot only: all rows share one position
+        pos = pos[0]
         s_cache = cache["layers"]["k"].shape[3]
         table = _sinusoid(s_cache, cfg.d_model, x.dtype)
         x = x + jax.lax.dynamic_slice_in_dim(
@@ -279,6 +287,91 @@ def decode_step(cfg, params, cache, token, pos):
         x, new_cache[f"tail{i}"] = block_decode(
             cfg, lt, params[f"tail{i}"], x, cache[f"tail{i}"], pos)
     return _out_head(cfg, params, x), new_cache
+
+
+# -- Slot-wise cache management (continuous batching) -----------------------
+#
+# The serve scheduler treats each batch row of the decode cache as an
+# independent *request slot*: a new request prefills into a free row, decodes
+# at its own position, and is evicted when it retires.  These helpers are the
+# only code that needs to know where the batch axis sits in each cache
+# subtree (axis 1 under the scanned "layers" stack, axis 0 for tail blocks).
+
+
+def _cache_batch_axis(key: str) -> int:
+    return 1 if key == "layers" else 0
+
+
+def _is_slot_pos(path) -> bool:
+    last = path[-1] if path else None
+    return getattr(last, "key", None) == "slot_pos"
+
+
+def cache_write_slot(cache, slot: int, row_cache, *, valid_upto=None):
+    """Copy batch row 0 of ``row_cache`` (a batch-1 cache, e.g. from a
+    per-request prefill) into batch row ``slot`` of ``cache``.
+
+    ``valid_upto`` invalidates cache entries at positions >= it in the
+    written row's slot→position maps: a prefill padded to a bucketed length
+    leaves pad K/V in the cache, and marking their slots empty (-1) makes
+    decode attention skip them (pure pattern surgery, no value rewrite).
+    """
+    out = {}
+    for key, sub in cache.items():
+        axis = _cache_batch_axis(key)
+
+        def write(path, full, one, axis=axis):
+            src = [slice(None)] * one.ndim
+            src[axis] = 0
+            row = one[tuple(src)].astype(full.dtype)
+            if valid_upto is not None and _is_slot_pos(path):
+                row = jnp.where(row >= valid_upto, -1, row)
+            dst = [slice(None)] * full.ndim
+            dst[axis] = slot
+            return full.at[tuple(dst)].set(row)
+
+        out[key] = jax.tree_util.tree_map_with_path(write, sub,
+                                                    row_cache[key])
+    return out
+
+
+def cache_evict_slot(cache, slot: int):
+    """Retire batch row ``slot``: zero its K/V and recurrent state and mark
+    every slot→position map entry empty (-1), so no stale KV can leak into
+    the row's next occupant (the no-orphaned-slots invariant)."""
+    out = {}
+    for key, sub in cache.items():
+        axis = _cache_batch_axis(key)
+
+        def evict(path, leaf, axis=axis):
+            dst = [slice(None)] * leaf.ndim
+            dst[axis] = slot
+            fill = -1 if _is_slot_pos(path) else 0
+            return leaf.at[tuple(dst)].set(fill)
+
+        out[key] = jax.tree_util.tree_map_with_path(evict, sub)
+    return out
+
+
+def cache_slot_occupancy(cache) -> np.ndarray:
+    """Per-slot count of valid (position >= 0) KV entries summed over every
+    attention cache in the tree — 0 for a free/evicted slot.  The serve-loop
+    tests assert a drained scheduler leaves this all-zero."""
+    total = None
+    for key, sub in cache.items():
+        axis = _cache_batch_axis(key)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(sub)[0]:
+            if not _is_slot_pos(path):
+                continue
+            valid = np.asarray(leaf) >= 0
+            other = tuple(i for i in range(valid.ndim) if i != axis)
+            cnt = valid.sum(axis=other)
+            total = cnt if total is None else total + cnt
+    if total is None:        # recurrent-only family (no attention caches)
+        n = jax.tree.leaves(cache)[0].shape[_cache_batch_axis(
+            next(iter(cache)))]
+        total = np.zeros(n, dtype=np.int64)
+    return total
 
 
 def encdec_prefill(cfg, params, frames, cache):

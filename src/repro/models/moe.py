@@ -13,6 +13,7 @@ expert routing); the jnp batched einsum here is the lowering/dry-run path.
 """
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import numpy as np
@@ -49,21 +50,72 @@ def host_route(tokens, router_w, *, top_k: int
 
 # -- Host-routed dispatch through the op registry ---------------------------
 #
-# launch/serve.py --host-moe installs the process's ReapRuntime here; eager
-# (non-traced) moe_ffn calls then route their dispatch through the
-# registered ``moe_dispatch`` op, so decode steps share warm bundling plans
-# and — with --plan-store — reuse them across server restarts.  Traced
-# calls (jitted prefill/train) keep the in-graph path: a tracer can't leave
-# the graph for a host-side plan cache.
+# launch/serve.py --host-moe installs the process's ReapRuntime here.  Two
+# paths route dispatch through the registered ``moe_dispatch`` op:
+#
+#   * eager (non-traced) moe_ffn calls run the full host path
+#     (``_moe_ffn_host``): host router + registry bundling + combine;
+#   * *traced decode steps* (s == 1 under jit) stay compiled and hop to the
+#     host only for the irregular half — a ``jax.pure_callback`` ships the
+#     routing pattern out, the warm ``MoeDispatchPlan``'s ``dest`` comes
+#     back, and bundling/expert-GEMM/combine stay in-graph on device.  This
+#     is the REAP split inside one jitted step: index manipulation off the
+#     critical compute path, FLOPs streaming on it.
+#
+# Traced prefill/train calls (s > 1) keep the pure in-graph path.  The
+# callback branch is baked in at trace time: install the runtime *before*
+# the first jitted decode step (serve.py does).
 
 _HOST_DISPATCH_RT = None
 
 
 def set_host_dispatch_runtime(rt) -> None:
-    """Install (or with ``None`` remove) the runtime eager ``moe_ffn``
-    calls route their dispatch through."""
+    """Install (or with ``None`` remove) the runtime ``moe_ffn`` routes its
+    dispatch through — eagerly for non-traced calls, via ``pure_callback``
+    for jitted decode steps."""
     global _HOST_DISPATCH_RT
     _HOST_DISPATCH_RT = rt
+
+
+def _host_plan_dest(expert_ids, *, n_experts: int, capacity: int):
+    """Host half of the jitted dispatch callback: routing *pattern* in,
+    warm plan's slot destinations out.
+
+    Runs under ``jax.pure_callback`` from inside the compiled decode step —
+    tokens/gates (values) never leave the device; the (t, k) expert ids are
+    the only traffic.  Plans are keyed **per token pattern**: a single
+    token's routing choice is one of only P(E, k) ordered expert tuples, so
+    a sustained decode stream revisits the same fingerprints after a short
+    warmup and every revisit is a warm ``moe_dispatch`` hit — the paper's
+    amortization argument at token granularity.  The only per-call work
+    outside the plan is an O(t·E) numpy prefix count that merges per-token
+    ranks into the joint capacity assignment, bit-identical to
+    ``expert_assignment`` on the full flattened pattern (stable flattened
+    order ⇒ joint rank = count of same-expert entries in earlier tokens +
+    within-token rank).  Falls back to the shared assignment math when the
+    runtime was uninstalled after tracing (same integers, no caching).
+    """
+    rt = _HOST_DISPATCH_RT
+    e = np.asarray(expert_ids, np.int64)
+    t, k = e.shape
+    n_slots = n_experts * capacity
+    if rt is None or k > capacity:
+        _, _, dest = expert_assignment(e.reshape(-1), capacity, n_experts,
+                                       xp=np)
+        return np.asarray(dest, np.int32)
+    stub = np.zeros((1, 0), np.float32)          # pattern-only call
+    counts = np.zeros(n_experts, np.int64)
+    dest = np.empty(t * k, np.int32)
+    for i in range(t):
+        _, plan, _ = rt.moe_dispatch(stub, e[i:i + 1], n_experts=n_experts,
+                                     capacity=capacity)
+        ei = e[i]
+        r = np.asarray(plan.dest, np.int64) - ei * capacity  # within-token
+        pos = counts[ei] + r
+        dest[i * k:(i + 1) * k] = np.where(
+            pos < capacity, ei * capacity + pos, n_slots)
+        np.add.at(counts, ei, 1)
+    return dest
 
 
 def _moe_ffn_host(x, p, *, n_experts: int, top_k: int,
@@ -162,7 +214,8 @@ def expert_swiglu(x_bundles, w_gate, w_up, w_down):
     return jnp.einsum("ecf,efd->ecd", g * u, w_down.astype(x_bundles.dtype))
 
 
-def _row_dispatch(tokens, router_w, *, n_experts, top_k, capacity):
+def _row_dispatch(tokens, router_w, *, n_experts, top_k, capacity,
+                  host_cb: bool = False):
     """Per-batch-row routing → slot maps (arrays only — vmap-safe).
 
     §Perf MoE it.1: the original global dispatch argsorted ALL B·S tokens
@@ -185,10 +238,25 @@ def _row_dispatch(tokens, router_w, *, n_experts, top_k, capacity):
 
     # capacity assignment: shared with the host inspector (core.routing)
     e_flat = expert.reshape(-1)
-    _, keep, dest = expert_assignment(e_flat, capacity, n_experts, xp=jnp)
+    n_slots = n_experts * capacity
+    if host_cb:
+        # jitted decode with a host runtime installed: the routing pattern
+        # leaves the graph through pure_callback and the warm plan's slot
+        # destinations come back.  ``keep`` is recoverable in-graph — kept
+        # entries are exactly those below the overflow sentinel — and the
+        # host uses the same ``expert_assignment`` math, so the integers
+        # (hence all downstream floats) match the in-graph path bit-for-bit.
+        dest = jax.pure_callback(
+            functools.partial(_host_plan_dest, n_experts=n_experts,
+                              capacity=capacity),
+            jax.ShapeDtypeStruct((t * top_k,), jnp.int32),
+            expert, vmap_method="sequential")
+        keep = dest < n_slots
+    else:
+        _, keep, dest = expert_assignment(e_flat, capacity, n_experts,
+                                          xp=jnp)
 
     token_idx = jnp.repeat(jnp.arange(t), top_k)
-    n_slots = n_experts * capacity
     slot_token = scatter_to_slots(dest, token_idx.astype(jnp.int32),
                                   n_slots, fill=t, xp=jnp)
     slot_gate = scatter_to_slots(
@@ -201,8 +269,8 @@ def _row_dispatch(tokens, router_w, *, n_experts, top_k, capacity):
     return slot_token, slot_gate, aux_loss
 
 
-def moe_ffn(x, p, *, n_experts: int, top_k: int, capacity_factor: float
-            ) -> Tuple[jax.Array, jax.Array]:
+def moe_ffn(x, p, *, n_experts: int, top_k: int, capacity_factor: float,
+            _host_cb: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Full MoE FFN. x: (B, S, d). Returns (out, aux_loss).
 
     Data movement per layer (EP over ``model``, DP over ``data``):
@@ -211,8 +279,6 @@ def moe_ffn(x, p, *, n_experts: int, top_k: int, capacity_factor: float
       * combine scatter-adds slot outputs into (t, d) partials per shard,
         reduced by one (B, S, d)-sized all-reduce — no (t·k, d) traffic.
     """
-    import functools
-
     from repro.parallel.api import constrain
     if _HOST_DISPATCH_RT is not None and not isinstance(x, jax.core.Tracer):
         # eager serving call with a runtime installed: dispatch through the
@@ -222,15 +288,22 @@ def moe_ffn(x, p, *, n_experts: int, top_k: int, capacity_factor: float
     b, s, d = x.shape
     # decode (s == 1): per-row bundling degenerates (capacity 8 per single
     # token); bundle across the batch instead — the sort is over B·k
-    # elements, trivially local (§Perf MoE it.3)
+    # elements, trivially local (§Perf MoE it.3).  A traced decode step
+    # with a host runtime installed keeps the step jitted and routes only
+    # ``dest`` through the registry callback (see _host_plan_dest).
     if s == 1:
-        out, aux = moe_ffn(x.reshape(1, b, d), p, n_experts=n_experts,
-                           top_k=top_k, capacity_factor=capacity_factor)
-        return out.reshape(b, s, d), aux
+        host_cb = _HOST_DISPATCH_RT is not None
+        if b > 1:
+            out, aux = moe_ffn(x.reshape(1, b, d), p, n_experts=n_experts,
+                               top_k=top_k, capacity_factor=capacity_factor,
+                               _host_cb=host_cb)
+            return out.reshape(b, s, d), aux
+        _host_cb = host_cb                        # b == 1: no reshape needed
     cap = expert_capacity(s, n_experts, top_k, capacity_factor)
 
     disp = jax.vmap(functools.partial(
-        _row_dispatch, n_experts=n_experts, top_k=top_k, capacity=cap),
+        _row_dispatch, n_experts=n_experts, top_k=top_k, capacity=cap,
+        host_cb=_host_cb),
         in_axes=(0, None))
     slot_token, slot_gate, aux = disp(x, p["router"])   # (B, E*cap)
 

@@ -92,7 +92,7 @@ def cache_pspec_fn(cfg, mesh: Mesh, batch: int):
     Leaf kinds:
       k/v:       (L?, B, Hkv, S, D) → batch over DP if divisible, else
                  S over data (sequence parallelism for global_batch=1)
-      slot_pos:  (S,) replicated
+      slot_pos:  (B, S) batch over DP if divisible, else replicated
       wkv/ssm:   (L?, B, H, K, V)   → batch over DP else heads over model
       shift*:    (L?, B, d)         → batch over DP
     """
@@ -105,6 +105,8 @@ def cache_pspec_fn(cfg, mesh: Mesh, batch: int):
         lead = (None,) if stacked else ()
         n = ndim - len(lead)
         if path.endswith("slot_pos"):
+            if batch_ok and n == 2 and leaf.shape[len(lead)] == batch:
+                return P(*lead, dp, None)
             return P(*lead, *([None] * n))
         if path.endswith(("k", "v", "xk", "xv")) and n == 4:
             b, hkv, s, d = leaf.shape[-4:]

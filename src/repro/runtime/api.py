@@ -210,6 +210,12 @@ class ReapRuntime:
                 per_op.setdefault(tag, dict(hits=0, store_hits=0, misses=0))
                 for k, v in rec.items():
                     per_op[tag][k] += v
+        for rec in per_op.values():
+            # warm = any plan served without a fresh inspection (memory or
+            # store); the serve bench gates on this per-op rate
+            warm = rec["hits"] + rec["store_hits"]
+            total = warm + rec["misses"]
+            rec["warm_rate"] = warm / total if total else 0.0
         out["per_op"] = per_op
         if self.store is not None:
             out["store"] = self.store.summary()

@@ -1,0 +1,138 @@
+"""Unit coverage for runtime/elastic.py — retry backoff, straggler
+watchdog, elastic mesh planning.  These are single-host pure-Python units
+(previously only touched by the version-skipped test_distributed.py), so
+they run everywhere; sleeps are monkeypatched away and timing is fed as
+data — no wall-clock dependence."""
+import pytest
+
+import jax
+
+from repro.runtime.elastic import ElasticPlan, StepWatchdog, retry
+
+
+class _Flaky:
+    """Fails ``n_fail`` times with ``exc`` before succeeding."""
+
+    def __init__(self, n_fail, exc=OSError):
+        self.n_fail = n_fail
+        self.exc = exc
+        self.calls = 0
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        if self.calls <= self.n_fail:
+            raise self.exc(f"transient #{self.calls}")
+        return (args, kwargs)
+
+
+class TestRetry:
+    def test_first_try_success_no_sleep(self, monkeypatch):
+        slept = []
+        monkeypatch.setattr("time.sleep", slept.append)
+        assert retry(lambda: 42) == 42
+        assert slept == []
+
+    def test_backoff_schedule_doubles_from_base(self, monkeypatch):
+        slept = []
+        monkeypatch.setattr("time.sleep", slept.append)
+        fn = _Flaky(3)
+        retry(fn, retries=3, base_delay=0.5)
+        assert fn.calls == 4
+        assert slept == [0.5, 1.0, 2.0]     # base * 2**attempt
+
+    def test_exhausted_retries_reraise(self, monkeypatch):
+        slept = []
+        monkeypatch.setattr("time.sleep", slept.append)
+        fn = _Flaky(5)
+        with pytest.raises(OSError):
+            retry(fn, retries=2, base_delay=0.25)
+        assert fn.calls == 3                # initial + 2 retries
+        assert slept == [0.25, 0.5]         # no sleep after the final raise
+
+    def test_on_error_sees_exception_and_attempt(self, monkeypatch):
+        monkeypatch.setattr("time.sleep", lambda s: None)
+        seen = []
+        retry(_Flaky(2), retries=3, base_delay=0.1,
+              on_error=lambda e, attempt: seen.append((str(e), attempt)))
+        assert seen == [("transient #1", 0), ("transient #2", 1)]
+
+    def test_non_transient_error_propagates_immediately(self, monkeypatch):
+        slept = []
+        monkeypatch.setattr("time.sleep", slept.append)
+        fn = _Flaky(1, exc=ValueError)
+        with pytest.raises(ValueError):
+            retry(fn, retries=3)
+        assert fn.calls == 1 and slept == []
+
+    def test_jax_runtime_error_is_transient(self, monkeypatch):
+        monkeypatch.setattr("time.sleep", lambda s: None)
+        fn = _Flaky(1, exc=jax.errors.JaxRuntimeError)
+        assert retry(fn, 7, retries=1, x=1) == ((7,), {"x": 1})
+
+    def test_args_kwargs_forwarded(self, monkeypatch):
+        monkeypatch.setattr("time.sleep", lambda s: None)
+        assert retry(lambda *a, **k: (a, k), 1, 2, z=3) == ((1, 2), {"z": 3})
+
+
+class TestStepWatchdog:
+    def test_silent_below_min_samples(self):
+        wd = StepWatchdog(factor=2.0, window=10, min_samples=5)
+        # a huge outlier among the first min_samples-1 observations is not
+        # flagged — no stable median yet
+        for step in range(4):
+            assert wd.observe(step, 100.0 if step == 2 else 1.0) is None
+        assert wd.events == []
+
+    def test_flags_step_above_factor_times_median(self):
+        wd = StepWatchdog(factor=3.0, window=50, min_samples=5)
+        for step in range(10):
+            assert wd.observe(step, 1.0) is None
+        ev = wd.observe(10, 3.5)            # median 1.0, 3.5 > 3.0 * 1.0
+        assert ev is not None
+        assert ev.step == 10 and ev.seconds == 3.5
+        assert ev.median == pytest.approx(1.0)
+        assert wd.events == [ev]
+
+    def test_boundary_not_flagged(self):
+        wd = StepWatchdog(factor=3.0, min_samples=2)
+        wd.observe(0, 1.0)
+        wd.observe(1, 1.0)
+        assert wd.observe(2, 3.0) is None   # exactly factor*median: not >
+
+    def test_window_evicts_old_samples(self):
+        wd = StepWatchdog(factor=3.0, window=4, min_samples=2)
+        for step in range(4):
+            wd.observe(step, 10.0)
+        # four fast steps push every slow sample out of the window...
+        for step in range(4, 8):
+            wd.observe(step, 1.0)
+        # ...so a 10s step that was normal under the old median now flags
+        ev = wd.observe(8, 10.0)
+        assert ev is not None and ev.median < 10.0 / 3.0
+
+    def test_median_includes_current_observation(self):
+        wd = StepWatchdog(factor=3.0, window=50, min_samples=5)
+        for step in range(5):
+            wd.observe(step, 1.0)
+        # a colossal step raises the median only marginally (median of
+        # [1]*5 + [100] is still 1.0) and must flag against it
+        ev = wd.observe(5, 100.0)
+        assert ev is not None and ev.median == pytest.approx(1.0)
+
+
+class TestElasticPlan:
+    def test_keeps_model_axis_shrinks_data(self):
+        plan = ElasticPlan.plan(240, 16)
+        assert (plan.data, plan.model) == (15, 16)
+
+    def test_exact_fit(self):
+        plan = ElasticPlan.plan(256, 16)
+        assert (plan.data, plan.model) == (16, 16)
+
+    def test_too_few_devices_raises(self):
+        with pytest.raises(RuntimeError, match="cannot restart"):
+            ElasticPlan.plan(7, 8)
+
+    def test_remainder_devices_dropped(self):
+        plan = ElasticPlan.plan(19, 4)      # 19 = 4*4 + 3 spare
+        assert (plan.data, plan.model) == (4, 4)

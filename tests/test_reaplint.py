@@ -136,6 +136,45 @@ class TestReap003Sync:
         assert check_source(self.GOOD, "core/fixture.py").ok
 
 
+class TestReap003SchedulerScope:
+    """The serve scheduler's decode hot loop carries the sync-hygiene
+    contract via SYNC_SCOPE_MODULES + HOT_LOOP_NAME_RE, without being an
+    OpSpec executor."""
+
+    HOT = (
+        "def step(self):\n"
+        "    logits = jnp.dot(self.w, self.x)\n"
+        "    logits.block_until_ready()\n"
+        "    return logits\n")
+
+    def test_hot_loop_in_scheduler_module_is_scoped(self):
+        report = check_source(self.HOT, "launch/scheduler.py")
+        assert codes_and_lines(report) == [("REAP003", 3)]
+
+    def test_same_code_outside_scope_module_is_clean(self):
+        # neither an execute name nor a scoped module → no executor role
+        assert check_source(self.HOT, "launch/other.py").ok
+
+    def test_non_hot_names_in_scheduler_stay_unscoped(self):
+        src = ("def submit(self, req):\n"
+               "    x = jnp.asarray(req.prompt)\n"
+               "    x.block_until_ready()\n")
+        assert check_source(src, "launch/scheduler.py").ok
+
+    def test_return_boundary_drain_is_allowed(self):
+        src = ("def _decode_batch(self, tok):\n"
+               "    logits = jnp.dot(self.w, tok)\n"
+               "    return np.asarray(jnp.argmax(logits, axis=-1))\n")
+        assert check_source(src, "launch/scheduler.py").ok
+
+    def test_shipped_scheduler_is_clean(self):
+        import pathlib
+        import repro.launch.scheduler as sched
+        path = pathlib.Path(sched.__file__)
+        report = check_source(path.read_text(), "launch/scheduler.py")
+        assert report.ok, [str(f) for f in report.findings]
+
+
 class TestReap004Shapes:
     BAD = (
         "def spmm_execute(plan, vals):\n"

@@ -1,0 +1,317 @@
+"""Trace-driven tests for the continuous-batching serve loop.
+
+Everything here is deterministic and wall-clock-free: the scheduler
+advances by step counting only, traces come from the seeded synthetic
+generator, and assertions replay exact step indices — no sleeps, no timing
+thresholds.
+
+Covers the PR-8 satellite checklist:
+  * scheduler invariants — token budget never exceeded, FIFO admission
+    order, retirement at exactly ``admitted_step + gen - 1``, drained
+    queue leaves zero orphaned KV slots;
+  * streaming — per-step callback order and completeness;
+  * request isolation — continuous-batched generations match isolated
+    single-request generation token-for-token;
+  * the ``--host-moe`` regression pin — decode logits through the
+    ``pure_callback`` host-dispatch path match the pure in-graph jitted
+    path bit-for-bit, and ``cache_stats()`` shows warm ``moe_dispatch``
+    hits after the first step.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.launch.scheduler import (IDLE_POS, Request, ServeScheduler,
+                                    synthetic_trace)
+from repro.models import model as M
+from repro.models import moe
+from repro.runtime import ReapRuntime
+
+MAX_SEQ = 32
+
+
+@pytest.fixture(scope="module")
+def attn_model():
+    cfg = reduced_config(get_config("qwen3-1.7b"))
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def moe_model():
+    cfg = reduced_config(get_config("dbrx-132b"))
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture()
+def host_runtime():
+    rt = ReapRuntime()
+    moe.set_host_dispatch_runtime(rt)
+    yield rt
+    moe.set_host_dispatch_runtime(None)
+
+
+def _trace(cfg, n, seed=0, **kw):
+    kw.setdefault("prompt_lens", (4, 6, 8))
+    kw.setdefault("gen_lens", (1, 2, 3, 5))
+    return synthetic_trace(n, seed=seed, vocab=cfg.vocab_size, **kw)
+
+
+class InstrumentedScheduler(ServeScheduler):
+    """Records per-step budget usage and slot membership after every step."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.budget_trace = []
+        self.admission_order = []
+
+    def step(self):
+        produced = super().step()
+        self.budget_trace.append(self.tokens_resident())
+        return produced
+
+    def _prefill_into(self, slot, req):
+        self.admission_order.append(req.rid)
+        super()._prefill_into(slot, req)
+
+
+class TestSchedulerInvariants:
+    def test_token_budget_never_exceeded(self, attn_model):
+        cfg, params = attn_model
+        budget = 24
+        sch = InstrumentedScheduler(cfg, params, max_batch=4,
+                                    max_seq=MAX_SEQ, token_budget=budget)
+        sch.run(_trace(cfg, 12, seed=7, max_gap=0))   # burst: max contention
+        assert sch.budget_trace, "no steps ran"
+        assert max(sch.budget_trace) <= budget
+        # the budget must actually bind somewhere, or this test is vacuous
+        assert max(sch.budget_trace) > budget - min(
+            len(r.prompt) + r.gen for r in _trace(cfg, 12, seed=7, max_gap=0))
+
+    def test_fifo_admission_under_contention(self, attn_model):
+        cfg, params = attn_model
+        # 2 slots, same-step burst of 10: admission must follow rid order
+        sch = InstrumentedScheduler(cfg, params, max_batch=2,
+                                    max_seq=MAX_SEQ)
+        trace = _trace(cfg, 10, seed=3, max_gap=0)
+        comps = sch.run(trace)
+        assert sch.admission_order == [r.rid for r in trace]
+        assert len(comps) == 10
+
+    def test_head_of_line_blocks_queue(self, attn_model):
+        cfg, params = attn_model
+        # a big head request must not be overtaken by a small later one
+        big = Request(rid=0, prompt=np.zeros(8, np.int32), gen=12)
+        small = Request(rid=1, prompt=np.zeros(4, np.int32), gen=2)
+        sch = InstrumentedScheduler(cfg, params, max_batch=2,
+                                    max_seq=MAX_SEQ, token_budget=21)
+        filler = Request(rid=9, prompt=np.zeros(4, np.int32), gen=4)
+        sch.submit(filler)                  # resident cost 8
+        sch.submit(big)                     # cost 20: blocked until filler
+        sch.submit(small)                   # cost 6: would fit, must wait
+        sch.step()
+        assert sch.admission_order == [9]   # big blocked, small NOT admitted
+        while not sch.drained():
+            sch.step()
+        assert sch.admission_order == [9, 0, 1]
+
+    def test_retirement_step_exact(self, attn_model):
+        cfg, params = attn_model
+        sch = ServeScheduler(cfg, params, max_batch=3, max_seq=MAX_SEQ)
+        comps = sch.run(_trace(cfg, 10, seed=5))
+        for c in comps:
+            assert c.finished_step == c.admitted_step + len(c.tokens) - 1
+            assert c.admitted_step >= c.submitted_step
+
+    def test_gen_lengths_respected(self, attn_model):
+        cfg, params = attn_model
+        trace = _trace(cfg, 10, seed=11)
+        sch = ServeScheduler(cfg, params, max_batch=3, max_seq=MAX_SEQ)
+        comps = {c.rid: c for c in sch.run(trace)}
+        assert set(comps) == {r.rid for r in trace}
+        for r in trace:
+            assert len(comps[r.rid].tokens) == r.gen
+
+    def test_drained_queue_no_orphaned_slots(self, attn_model):
+        cfg, params = attn_model
+        sch = ServeScheduler(cfg, params, max_batch=3, max_seq=MAX_SEQ)
+        sch.run(_trace(cfg, 8, seed=2))
+        assert sch.drained()
+        occ = M.cache_slot_occupancy(sch.cache)
+        assert (occ == 0).all(), f"orphaned KV slots: {occ.tolist()}"
+        assert sch.tokens_resident() == 0
+
+    def test_submit_rejects_impossible_requests(self, attn_model):
+        cfg, params = attn_model
+        sch = ServeScheduler(cfg, params, max_batch=2, max_seq=16,
+                             token_budget=12)
+        with pytest.raises(ValueError, match="max_seq"):
+            sch.submit(Request(rid=0, prompt=np.zeros(12, np.int32), gen=8))
+        with pytest.raises(ValueError, match="budget"):
+            sch.submit(Request(rid=1, prompt=np.zeros(8, np.int32), gen=6))
+        with pytest.raises(ValueError, match="gen"):
+            sch.submit(Request(rid=2, prompt=np.zeros(4, np.int32), gen=0))
+
+    def test_trace_is_deterministic(self, attn_model):
+        cfg, _ = attn_model
+        a, b = _trace(cfg, 6, seed=9), _trace(cfg, 6, seed=9)
+        assert [(r.rid, r.gen, r.arrival) for r in a] == \
+               [(r.rid, r.gen, r.arrival) for r in b]
+        assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+
+
+class TestStreaming:
+    def test_stream_matches_completions_in_step_order(self, attn_model):
+        cfg, params = attn_model
+        events = []
+        sch = ServeScheduler(
+            cfg, params, max_batch=3, max_seq=MAX_SEQ,
+            on_token=lambda rid, tok, step: events.append((rid, tok, step)))
+        comps = sch.run(_trace(cfg, 8, seed=4))
+        # every generated token was streamed exactly once, in order
+        by_rid = {}
+        for rid, tok, step in events:
+            by_rid.setdefault(rid, []).append((tok, step))
+        for c in comps:
+            toks = [t for t, _ in by_rid[c.rid]]
+            steps = [s for _, s in by_rid[c.rid]]
+            assert toks == c.tokens
+            # one token per step, contiguous from admission to retirement
+            assert steps == list(range(c.admitted_step, c.finished_step + 1))
+        assert sum(len(c.tokens) for c in comps) == len(events)
+        assert sch.stats["streamed_tokens"] == len(events)
+
+    def test_stream_step_monotone(self, attn_model):
+        cfg, params = attn_model
+        steps = []
+        sch = ServeScheduler(
+            cfg, params, max_batch=2, max_seq=MAX_SEQ,
+            on_token=lambda rid, tok, step: steps.append(step))
+        sch.run(_trace(cfg, 6, seed=8))
+        assert steps == sorted(steps)
+
+
+class TestRequestIsolation:
+    def _solo(self, cfg, params, prompt, gen):
+        cache = M.init_cache(cfg, 1, MAX_SEQ)
+        logits, cache = jax.jit(
+            lambda p, t, c: M.prefill(cfg, p, t, c))(
+                params, jnp.asarray(prompt[None]), cache)
+        toks = [int(np.argmax(np.asarray(logits)[0, len(prompt) - 1]))]
+        dec = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+        pos = len(prompt)
+        for _ in range(gen - 1):
+            lg, cache = dec(params, cache,
+                            jnp.asarray([[toks[-1]]], jnp.int32),
+                            jnp.asarray([pos], jnp.int32))
+            toks.append(int(np.argmax(np.asarray(lg)[0, -1])))
+            pos += 1
+        return toks
+
+    @pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma2-2b",
+                                      "rwkv6-1.6b"])
+    def test_matches_isolated_generation(self, arch):
+        cfg = reduced_config(get_config(arch))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        trace = _trace(cfg, 6, seed=6)
+        sch = ServeScheduler(cfg, params, max_batch=3, max_seq=MAX_SEQ)
+        comps = {c.rid: c for c in sch.run(trace)}
+        for r in trace:
+            assert comps[r.rid].tokens == self._solo(cfg, params, r.prompt,
+                                                     r.gen), f"rid {r.rid}"
+
+    def test_enc_dec_rejected(self):
+        cfg = reduced_config(get_config("whisper-small"))
+        with pytest.raises(ValueError, match="one-shot"):
+            ServeScheduler(cfg, {}, max_batch=2, max_seq=MAX_SEQ)
+
+
+class TestHostMoeRegression:
+    """Pins the --host-moe serving fix: decode must stay jitted AND route
+    dispatch through the registry — this is the test that would have caught
+    the eager-unroll regression."""
+
+    def _decode_logits(self, cfg, params, n_steps):
+        B, L = 4, 8
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0,
+                                  cfg.vocab_size)
+        cache = M.init_cache(cfg, B, MAX_SEQ)
+        logits, cache = jax.jit(
+            lambda p, t, c: M.prefill(cfg, p, t, c))(params, toks, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        pos = jnp.full((B,), L, jnp.int32)
+        dec = jax.jit(lambda p, c, t, q: M.decode_step(cfg, p, c, t, q))
+        outs = []
+        for _ in range(n_steps):
+            lg, cache = dec(params, cache, tok, pos)
+            outs.append(np.asarray(lg))
+            tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+            pos = pos + 1
+        return outs
+
+    def test_callback_path_bit_for_bit_with_in_graph(self, moe_model,
+                                                     host_runtime):
+        cfg, params = moe_model
+        moe.set_host_dispatch_runtime(None)
+        ref = self._decode_logits(cfg, params, 8)
+        moe.set_host_dispatch_runtime(host_runtime)
+        got = self._decode_logits(cfg, params, 8)
+        for i, (a, b) in enumerate(zip(ref, got)):
+            assert np.array_equal(a, b), (
+                f"step {i}: callback decode logits differ from in-graph "
+                f"(max abs diff {np.abs(a - b).max()})")
+
+    def test_warm_dispatch_hits_after_first_step(self, moe_model,
+                                                 host_runtime):
+        cfg, params = moe_model
+        self._decode_logits(cfg, params, 1)
+        first = host_runtime.cache_stats()["per_op"]["moe_dispatch"]
+        assert first["misses"] > 0, "callback never reached the registry"
+        self._decode_logits(cfg, params, 1)       # identical step replayed
+        second = host_runtime.cache_stats()["per_op"]["moe_dispatch"]
+        assert second["hits"] > first["hits"], (
+            "step 2 routed the same patterns but hit no warm plans")
+
+    def test_decode_traffic_is_warm_after_warmup(self, moe_model,
+                                                 host_runtime):
+        cfg, params = moe_model
+        trace = _trace(cfg, 10, seed=1)
+        sch = ServeScheduler(cfg, params, max_batch=4, max_seq=MAX_SEQ)
+        comps = sch.run(trace)
+        assert len(comps) == len(trace)
+        rec = host_runtime.cache_stats()["per_op"]["moe_dispatch"]
+        assert rec["warm_rate"] >= 0.5, rec   # most per-token plans reused
+        assert rec["hits"] > rec["misses"]
+
+    def test_scheduler_streams_with_host_moe(self, moe_model, host_runtime):
+        cfg, params = moe_model
+        streamed = []
+        sch = ServeScheduler(
+            cfg, params, max_batch=3, max_seq=MAX_SEQ,
+            on_token=lambda rid, tok, step: streamed.append(rid))
+        comps = sch.run(_trace(cfg, 6, seed=2))
+        assert len(comps) == 6 and streamed
+        occ = M.cache_slot_occupancy(sch.cache)
+        assert (occ == 0).all()
+
+
+class TestIdleSlotHygiene:
+    def test_idle_rows_never_gain_occupancy(self, attn_model):
+        cfg, params = attn_model
+        sch = ServeScheduler(cfg, params, max_batch=4, max_seq=MAX_SEQ)
+        # one long request: slots 1..3 stay idle across many decode steps
+        sch.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                           gen=10))
+        while not sch.drained():
+            sch.step()
+            occ = M.cache_slot_occupancy(sch.cache)
+            assert (occ[1:] == 0).all(), (
+                f"idle slots gained KV entries: {occ.tolist()}")
+        assert (M.cache_slot_occupancy(sch.cache) == 0).all()
+
+    def test_idle_pos_is_empty_sentinel(self):
+        # the idle-row position must be the same sentinel the cache uses
+        # for empty slots, or idle decode writes would look occupied
+        assert IDLE_POS == -1
