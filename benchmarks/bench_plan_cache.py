@@ -43,11 +43,15 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import CSR, random_csr, random_spd_csr
-from repro.runtime import ReapRuntime
+from repro.runtime import ReapRuntime, RuntimeConfig, add_runtime_args
 
 # per-op coverage is registry-driven and shared with fig6/fig10 (and the
 # analysis purity harness) — see op_coverage / repro.analysis.op_examples
 from .op_coverage import per_op_breakdown  # noqa: F401  (re-export)
+
+# CLI-derived base config (main() replaces it via RuntimeConfig.from_args);
+# each bench overrides only the knobs it is *about* (n_chunks, overlap, …)
+_BASE_CFG = RuntimeConfig()
 
 
 def _revalue(a: CSR, rng: np.random.Generator) -> CSR:
@@ -60,7 +64,7 @@ def _bench_runtime(method: str, n_chunks: int, overlap: bool) -> ReapRuntime:
     # block path: jnp executor (Pallas interpret mode on this container would
     # time the Python interpreter, not the schedule), modest MXU tile
     kw = dict(use_pallas=False, block=64) if method == "block" else {}
-    return ReapRuntime(n_chunks=n_chunks, overlap=overlap, **kw)
+    return ReapRuntime(_BASE_CFG, n_chunks=n_chunks, overlap=overlap, **kw)
 
 
 def _matrices(method: str, n: int, density: float, seed: int):
@@ -271,12 +275,12 @@ def bench_cholesky(n: int = 900, density: float = 0.01, repeats: int = 3,
 
     cold_s = []
     for _ in range(repeats):
-        rt = ReapRuntime(overlap=False)
+        rt = ReapRuntime(_BASE_CFG, overlap=False)
         t0 = time.perf_counter()
         rt.cholesky(a, dtype=jnp.float32)
         cold_s.append(time.perf_counter() - t0)
 
-    rt = ReapRuntime(overlap=False)
+    rt = ReapRuntime(_BASE_CFG, overlap=False)
     rt.cholesky(a, dtype=jnp.float32)
     warm_s, over_s = [], []
     for _ in range(repeats):
@@ -348,7 +352,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "(CI mode)")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write result rows to this JSON file")
+    add_runtime_args(ap)
     args = ap.parse_args(argv)
+    global _BASE_CFG
+    _BASE_CFG = RuntimeConfig.from_args(args)
     rows = run(reduced=args.reduced)
     if args.json:
         Path(args.json).write_text(json.dumps(

@@ -1,4 +1,4 @@
-"""Plan-store benchmark: the three claims of persistent warm restarts.
+"""Plan-store benchmark: the claims of persistent warm restarts.
 
 1. **warm restart beats cold build** — a process-fresh ``ReapRuntime`` whose
    plan cache is empty but whose plan *store* is populated must answer every
@@ -18,21 +18,35 @@
    workload replayed through ``BlockChunkSet`` must trigger at most one XLA
    compile per distinct pow-2 bucket tuple (``bucket_block_schedule``), not
    one per distinct raw chunk shape.
+4. **exec-store warm restart skips XLA** (time-to-first-result) — a
+   process-fresh runtime over a populated plan *and* executable store must
+   reach its first op results with **zero XLA compilations** (every
+   executor program deserialized from disk) and acquire plans+executables
+   ``MIN_SPEEDUP``× faster than inspecting+compiling them, with bit-for-bit
+   identical results.
+5. **corrupt executables heal by recompiling** — bit-flipping every
+   serialized executable must not crash or change results: affected keys
+   recompile silently, write-through re-persists good copies, values stay
+   bit-for-bit equal.
 
 Prints ``plan_store,...`` CSV lines with a PASS/FAIL verdict per claim and
 exits non-zero on failure (the gate ``.github/workflows/bench.yml`` relies
-on).  ``--store-dir`` points at a persistent directory: the first call the
-benchmark makes against it reports ``prior_store_hits`` — on a machine that
-restored the directory from a previous run (CI's ``actions/cache``), that
-count must be positive, which ``--expect-store-hits`` turns into a gated
-claim (warm restart works across machines, not just processes).
+on).  ``--store-dir``/``--plan-store`` and ``--exec-store`` point at
+persistent directories: the first call the benchmark makes against them
+reports ``prior_store_hits`` / ``prior_exec_loads`` — on a machine that
+restored the directories from a previous run (CI's ``actions/cache``),
+those counts must be positive, which ``--expect-store-hits`` /
+``--expect-exec-hits`` turn into gated claims (warm restart works across
+machines, not just processes).
 
     PYTHONPATH=src python -m benchmarks.bench_plan_store [--reduced]
-        [--store-dir DIR] [--expect-store-hits] [--json OUT]
+        [--plan-store DIR] [--exec-store DIR] [--expect-store-hits]
+        [--expect-exec-hits] [--json OUT]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import shutil
 import sys
@@ -47,7 +61,9 @@ import jax.numpy as jnp
 
 from repro.core import random_csr, random_spd_csr, spgemm_ref_numpy
 from repro.core.spgemm import _block_execute_jnp
-from repro.runtime import BlockChunkSet, ReapRuntime, bucket_block_schedule
+from repro.runtime import (BlockChunkSet, ExecCache, ReapRuntime,
+                           RuntimeConfig, bucket_block_schedule)
+from repro.runtime.exec_store import EXE_DIR
 
 #: documented tolerance: acquiring every plan of the mixed workload from the
 #: store (load + integrity check + deserialize) must be at least this much
@@ -81,10 +97,17 @@ class _Workload:
         self.tokens = rng.standard_normal((t, d)).astype(np.float32)
         self.expert_ids = rng.integers(0, 64, (t, 4))
 
-    @staticmethod
-    def runtime(store_dir: Optional[str]) -> ReapRuntime:
-        return ReapRuntime(store_dir=store_dir, use_pallas=False, block=64,
-                           n_chunks=4, overlap=False)
+    #: the benchmark's fixed non-store knobs; store directories vary per
+    #: phase via dataclasses.replace (the one RuntimeConfig construction
+    #: path — see runtime.api.RuntimeConfig)
+    BASE_CFG = RuntimeConfig(use_pallas=False, block=64, n_chunks=4,
+                             overlap=False)
+
+    @classmethod
+    def runtime(cls, store_dir: Optional[str],
+                exec_dir: Optional[str] = None) -> ReapRuntime:
+        return ReapRuntime(dataclasses.replace(
+            cls.BASE_CFG, store_dir=store_dir, exec_store_dir=exec_dir))
 
     def run(self, rt: ReapRuntime) -> dict:
         _, sg = rt.spgemm(self.ga, self.gb, method="gather")
@@ -241,6 +264,122 @@ def bench_bucketing(reduced: bool, verbose: bool = True) -> dict:
     return row
 
 
+def bench_exec_restart(store_dir: str, exec_dir: str, reduced: bool,
+                       repeats: int = 3, verbose: bool = True) -> dict:
+    """Claim 4: a restarted process reaches first results with zero XLA
+    compiles and ≥ MIN_SPEEDUP× faster plan+compile acquisition.
+
+    Cold side: fresh runtime, no stores, a memory-only ExecCache installed
+    so every compilation is paid *and measured* through the same AOT path
+    the store uses (``persistent_jit`` bypasses jax's per-process jit
+    cache whenever an exec cache is active, so repeats stay honest).
+    Warm side: process-fresh runtime over the populated plan + exec
+    stores — acquisition is pure deserialization.
+    """
+    wl = _Workload(reduced)
+
+    # first touch: populates both stores; on a CI-restored directory this
+    # measures the cross-machine restart (prior_exec_loads > 0)
+    rt0 = wl.runtime(store_dir, exec_dir)
+    wl.run(rt0)
+    prior_exec_loads = rt0.exec.stats.loads
+
+    cold_acq: List[float] = []
+    cold_ref = None
+    for _ in range(repeats):
+        rt = wl.runtime(None)           # no stores: inspect + compile
+        rt.exec = ExecCache(store=None)  # count + time the compiles
+        stats = wl.run(rt)
+        cold_ref, _ = rt.spgemm(wl.ga, wl.gb, method="gather")
+        assert rt.exec.stats.compiles > 0, \
+            "cold side must pay XLA compilation"
+        cold_acq.append(_stage_time(stats) + rt.exec.stats.compile_s)
+
+    warm_acq: List[float] = []
+    warm_compiles: List[int] = []
+    warm_loads: List[int] = []
+    exec_hits = True
+    warm_ref = None
+    for _ in range(repeats):
+        rt = wl.runtime(store_dir, exec_dir)    # process-fresh, warm disks
+        stats = wl.run(rt)
+        warm_ref, st = rt.spgemm(wl.ga, wl.gb, method="gather")
+        exec_hits &= all(s["exec_cache_hit"] for s in stats.values())
+        exec_hits &= bool(st["exec_cache_hit"])
+        warm_compiles.append(rt.exec.stats.compiles)
+        warm_loads.append(rt.exec.stats.loads)
+        warm_acq.append(rt.store.stats.load_s + rt.exec.stats.load_s)
+
+    cold = float(np.min(cold_acq))
+    warm = float(np.min(warm_acq))
+    speedup = cold / max(warm, 1e-9)
+    zero_compiles = max(warm_compiles) == 0
+    loaded = min(warm_loads) >= 1
+    bitwise = bool(np.array_equal(np.asarray(cold_ref.data),
+                                  np.asarray(warm_ref.data)))
+    row = dict(bench="exec_warm_restart_ttfr",
+               cold_acquire_s=cold, warm_acquire_s=warm, speedup=speedup,
+               warm_xla_compiles=int(max(warm_compiles)),
+               warm_exec_loads=int(min(warm_loads)),
+               prior_exec_loads=int(prior_exec_loads),
+               exec_store_entries=len(rt0.exec.store),
+               exec_hits=exec_hits, bitwise_equal=bitwise, gate=True,
+               ok=bool(speedup >= MIN_SPEEDUP and zero_compiles and loaded
+                       and exec_hits and bitwise))
+    if verbose:
+        print(f"plan_store,exec_restart,"
+              f"cold_acquire_ms={cold * 1e3:.1f},"
+              f"warm_acquire_ms={warm * 1e3:.1f},speedup={speedup:.2f},"
+              f"warm_compiles={max(warm_compiles)},"
+              f"exec_loads={min(warm_loads)},exec_hits={exec_hits},"
+              f"bitwise={bitwise},prior_exec_loads={prior_exec_loads},"
+              f"{'PASS' if row['ok'] else 'FAIL'}"
+              f"(>={MIN_SPEEDUP}x, 0 compiles)")
+    return row
+
+
+def bench_exec_corruption(reduced: bool, verbose: bool = True) -> dict:
+    """Claim 5: corrupt executable payloads recompile silently, results
+    bit-for-bit equal, write-through re-persists good copies."""
+    with tempfile.TemporaryDirectory() as d:
+        plan_d, exec_d = str(Path(d, "plans")), str(Path(d, "exe"))
+        wl = _Workload(True)               # corruption claim: small is fine
+        rt = wl.runtime(plan_d, exec_d)
+        wl.run(rt)
+        ref, _ = rt.spgemm(wl.ga, wl.gb, method="gather")
+        payloads = sorted(Path(exec_d, EXE_DIR).glob("*.bin"))
+        assert payloads, "expected persisted executables"
+        for p in payloads:                  # flip one byte in every payload
+            blob = bytearray(p.read_bytes())
+            blob[len(blob) // 2] ^= 0xFF
+            p.write_bytes(bytes(blob))
+
+        rt2 = wl.runtime(plan_d, exec_d)    # fresh process, damaged store
+        wl.run(rt2)
+        got, _ = rt2.spgemm(wl.ga, wl.gb, method="gather")
+        corrupt_seen = rt2.exec.store.stats.corrupt
+        recompiled = rt2.exec.stats.compiles
+        repersisted = rt2.exec.stats.saves
+        bitwise = bool(np.array_equal(np.asarray(ref.data),
+                                      np.asarray(got.data)))
+        report = rt2.exec.store.verify()    # write-through healed the store
+        healed = not report["corrupt"] and len(report["ok"]) >= 1
+        row = dict(bench="exec_corruption_recompile",
+                   payloads=len(payloads), corrupt_seen=int(corrupt_seen),
+                   recompiled=int(recompiled), repersisted=int(repersisted),
+                   healed=healed, bitwise_equal=bitwise, gate=True,
+                   ok=bool(corrupt_seen == len(payloads)
+                           and recompiled >= len(payloads)
+                           and repersisted >= len(payloads)
+                           and healed and bitwise))
+    if verbose:
+        print(f"plan_store,exec_corruption,payloads={len(payloads)},"
+              f"corrupt_seen={corrupt_seen},recompiled={recompiled},"
+              f"repersisted={repersisted},healed={healed},bitwise={bitwise},"
+              f"{'PASS' if row['ok'] else 'FAIL'}")
+    return row
+
+
 def bench_store_io(reduced: bool, verbose: bool = True) -> dict:
     """Informational: manifest + payload sizes, gc behaviour under budget."""
     with tempfile.TemporaryDirectory() as d:
@@ -263,18 +402,25 @@ def bench_store_io(reduced: bool, verbose: bool = True) -> dict:
 
 
 def run(reduced: bool = False, store_dir: Optional[str] = None,
-        expect_store_hits: bool = False, verbose: bool = True) -> List[dict]:
-    tmp = None
+        exec_dir: Optional[str] = None, expect_store_hits: bool = False,
+        expect_exec_hits: bool = False, verbose: bool = True) -> List[dict]:
+    tmps: List[str] = []
     if store_dir is None:
-        tmp = tempfile.mkdtemp(prefix="plan-store-bench-")
-        store_dir = tmp
+        store_dir = tempfile.mkdtemp(prefix="plan-store-bench-")
+        tmps.append(store_dir)
+    if exec_dir is None:
+        exec_dir = tempfile.mkdtemp(prefix="exec-store-bench-")
+        tmps.append(exec_dir)
     try:
         rows = [bench_warm_restart(store_dir, reduced, verbose=verbose),
                 bench_corruption(reduced, verbose=verbose),
                 bench_bucketing(reduced, verbose=verbose),
+                bench_exec_restart(store_dir, exec_dir, reduced,
+                                   verbose=verbose),
+                bench_exec_corruption(reduced, verbose=verbose),
                 bench_store_io(reduced, verbose=verbose)]
     finally:
-        if tmp is not None:
+        for tmp in tmps:
             shutil.rmtree(tmp, ignore_errors=True)
     if expect_store_hits:
         hits = rows[0]["prior_store_hits"]
@@ -284,6 +430,15 @@ def run(reduced: bool = False, store_dir: Optional[str] = None,
             print(f"plan_store,cold_machine_restart,prior_store_hits={hits},"
                   f"{'PASS' if row['ok'] else 'FAIL'}(>0)")
         rows.append(row)
+    if expect_exec_hits:
+        loads = rows[3]["prior_exec_loads"]
+        row = dict(bench="cold_machine_exec_restart", prior_exec_loads=loads,
+                   gate=True, ok=loads > 0)
+        if verbose:
+            print(f"plan_store,cold_machine_exec_restart,"
+                  f"prior_exec_loads={loads},"
+                  f"{'PASS' if row['ok'] else 'FAIL'}(>0)")
+        rows.append(row)
     if verbose:
         ok = all(r["ok"] for r in rows if r.get("gate", True))
         print(f"plan_store,verdict,{'PASS' if ok else 'FAIL'}")
@@ -291,19 +446,27 @@ def run(reduced: bool = False, store_dir: Optional[str] = None,
 
 
 def main(argv: Optional[List[str]] = None) -> int:
+    from repro.runtime import add_runtime_args
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--reduced", action="store_true",
                     help="smaller problem sizes (CI mode)")
-    ap.add_argument("--store-dir", default=None,
-                    help="persistent store directory (default: fresh tmpdir)")
+    ap.add_argument("--store-dir", dest="plan_store", metavar="DIR",
+                    help="alias for --plan-store (original flag name)")
     ap.add_argument("--expect-store-hits", action="store_true",
-                    help="fail unless the first touch of --store-dir hits "
-                         "plans persisted by a previous process/machine")
+                    help="fail unless the first touch of the plan store "
+                         "hits plans persisted by a previous process/machine")
+    ap.add_argument("--expect-exec-hits", action="store_true",
+                    help="fail unless the first touch of the exec store "
+                         "loads executables persisted by a previous "
+                         "process/machine")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write result rows to this JSON file")
+    add_runtime_args(ap)    # --plan-store/--exec-store + shared knobs
     args = ap.parse_args(argv)
-    rows = run(reduced=args.reduced, store_dir=args.store_dir,
-               expect_store_hits=args.expect_store_hits)
+    rows = run(reduced=args.reduced, store_dir=args.plan_store,
+               exec_dir=args.exec_store,
+               expect_store_hits=args.expect_store_hits,
+               expect_exec_hits=args.expect_exec_hits)
     if args.json:
         Path(args.json).write_text(json.dumps(
             dict(bench="plan_store", reduced=args.reduced,

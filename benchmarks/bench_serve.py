@@ -39,7 +39,7 @@ from repro.configs import get_config, reduced_config
 from repro.launch.scheduler import Request, ServeScheduler, synthetic_trace
 from repro.models import model as M
 from repro.models import moe
-from repro.runtime import ReapRuntime
+from repro.runtime import ReapRuntime, RuntimeConfig, add_runtime_args
 
 MIN_CONTINUOUS_SPEEDUP = 1.2     # continuous vs serial tokens/sec
 MIN_WARM_STEP_FRACTION = 0.9     # decode steps with zero fresh inspections
@@ -102,7 +102,9 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, metavar="OUT")
+    add_runtime_args(ap)
     args = ap.parse_args(argv)
+    base_cfg = RuntimeConfig.from_args(args)
 
     cfg = reduced_config(get_config(args.arch))
     if cfg.ffn != "moe":
@@ -116,7 +118,7 @@ def main(argv=None):
     total_gen = sum(r.gen for r in trace)
     rows, failures = [], []
 
-    rt = ReapRuntime()
+    rt = ReapRuntime(base_cfg)
     moe.set_host_dispatch_runtime(rt)
     try:
         # -- claim 1: continuous vs serial tokens/sec --------------------
@@ -135,6 +137,15 @@ def main(argv=None):
                              seconds=round(dt, 4), tok_per_s=round(tps, 2)))
             print(f"serve,{mode},batch={batch},tokens={tokens},"
                   f"steps={steps},sec={dt:.3f},tok/s={tps:.1f}")
+            lat = sch.latency_summary()
+            rows.append(dict(row="latency", mode=mode, **{
+                f"{kind}_{k}": (round(v, 6) if isinstance(v, float) else v)
+                for kind, p in lat.items() for k, v in p.items()}))
+            print(f"serve,latency,{mode},"
+                  f"ttft_p50_ms={lat['ttft']['p50_s'] * 1e3:.1f},"
+                  f"ttft_p99_ms={lat['ttft']['p99_s'] * 1e3:.1f},"
+                  f"decode_p50_ms={lat['decode_step']['p50_s'] * 1e3:.1f},"
+                  f"decode_p99_ms={lat['decode_step']['p99_s'] * 1e3:.1f}")
         speedup = results["continuous"] / results["serial"]
         ok1 = speedup >= MIN_CONTINUOUS_SPEEDUP
         rows.append(dict(row="gate", gate="continuous_speedup",
@@ -147,7 +158,7 @@ def main(argv=None):
             failures.append("continuous_speedup")
 
         # -- claim 2: warm dispatch plans inside the jitted decode -------
-        warm_rt = ReapRuntime()
+        warm_rt = ReapRuntime(base_cfg)
         moe.set_host_dispatch_runtime(warm_rt)
         sch = ServeScheduler(cfg, params, max_batch=args.max_batch,
                              max_seq=MAX_SEQ)

@@ -24,7 +24,11 @@ REAP002  registry completeness: every non-router ``OpSpec`` declares the
          required hooks; ``plan_types`` entries are dataclasses the
          generic serializer can round-trip; the generic runtime modules
          (``runtime/api.py``, ``runtime/plan_cache.py``,
-         ``runtime/plan_store.py``) contain no op-tag string branches.
+         ``runtime/plan_store.py``) contain no op-tag string branches;
+         run-stats keys used in those modules (``RunStats(key=...)``
+         kwargs, ``stats["key"] = ...`` writes) are declared in
+         ``ops.RUNSTATS_FIELDS`` — ad-hoc keys silently vanish from the
+         typed surface.
 REAP003  sync hygiene: executor scope must not call ``device_get`` /
          ``block_until_ready``, ``np.asarray`` a device value mid-body
          (return-boundary conversion is fine), or branch with Python
@@ -58,6 +62,11 @@ META_OF_VALUE_ATTRS = ("dtype", "shape", "nbytes", "size", "ndim")
 # generic runtime modules that must stay op-agnostic (REAP002c)
 PROTECTED_TAG_MODULES = (
     "runtime/api.py", "runtime/plan_cache.py", "runtime/plan_store.py")
+# variables that hold a per-run stats mapping (REAP002d: writes through
+# them must use declared RUNSTATS_FIELDS keys)
+STATS_NAME_RE = re.compile(r"(^|_)(stats?|st)(_|$)")
+# the one non-field RunStats kwarg: the op-specific passthrough dict
+RUNSTATS_EXTRA_KWARGS = ("extra",)
 SYNC_CALL_ROOTS = ("jax", "jnp")
 # modules whose decode-hot-loop functions carry the REAP003 sync-hygiene
 # contract even though they are not OpSpec executors: the serve scheduler's
@@ -97,12 +106,16 @@ def is_protected_module(path: str) -> bool:
 
 
 def is_jitted(node: ast.AST) -> bool:
-    """True for ``@jax.jit`` / ``@jit`` / ``partial(jax.jit, ...)``."""
+    """True for ``@jax.jit`` / ``@jit`` / ``partial(jax.jit, ...)`` and the
+    exec-store wrapper ``@persistent_jit(...)`` (which lowers through
+    ``jax.jit`` and keeps traced-shape semantics inside the body)."""
     for dec in getattr(node, "decorator_list", ()):
         for sub in ast.walk(dec):
-            if isinstance(sub, ast.Name) and sub.id == "jit":
+            if isinstance(sub, ast.Name) \
+                    and sub.id in ("jit", "persistent_jit"):
                 return True
-            if isinstance(sub, ast.Attribute) and sub.attr == "jit":
+            if isinstance(sub, ast.Attribute) \
+                    and sub.attr in ("jit", "persistent_jit"):
                 return True
     return False
 
@@ -276,6 +289,45 @@ def rule_registry(pf, facts, meta) -> List[Finding]:
                             f"op-tag dict dispatch on {tag!r} in generic "
                             f"runtime module; enumerate list_ops() "
                             f"instead"))
+        out.extend(_runstats_fields(pf, meta))
+    return out
+
+
+def _runstats_fields(pf, meta) -> List[Finding]:
+    """REAP002d — run-stats keys in protected modules are declared fields.
+
+    ``RunStats`` is the typed per-run stats surface; its field list lives
+    in ``ops.RUNSTATS_FIELDS`` so this check (stdlib-only) and the
+    dataclass (jax-side) enforce one schema.  An undeclared
+    ``RunStats(new_key=...)`` kwarg or ``stats["new_key"] = ...`` write in
+    a generic runtime module means a stat consumers can never see through
+    the typed API — declare the field instead.
+    """
+    declared = set(meta.RUNSTATS_FIELDS) | set(RUNSTATS_EXTRA_KWARGS)
+    out: List[Finding] = []
+    for node in ast.walk(pf.tree):
+        if isinstance(node, ast.Call) \
+                and attr_tail(node.func) == "RunStats":
+            for kw in node.keywords:
+                if kw.arg is not None and kw.arg not in declared:
+                    out.append((
+                        "REAP002", kw,
+                        f"RunStats kwarg `{kw.arg}=` is not a declared "
+                        f"field; add it to ops.RUNSTATS_FIELDS (and the "
+                        f"dataclass) or route it through extra="))
+        elif isinstance(node, ast.Assign):
+            for target in node.targets:
+                if isinstance(target, ast.Subscript) \
+                        and isinstance(target.value, ast.Name) \
+                        and STATS_NAME_RE.search(target.value.id):
+                    key = const_str(getattr(target, "slice", None))
+                    if key is not None and key not in declared:
+                        out.append((
+                            "REAP002", target,
+                            f"ad-hoc stats key {key!r} written through "
+                            f"`{target.value.id}[...]` in generic runtime "
+                            f"module; run-stats keys must be declared in "
+                            f"ops.RUNSTATS_FIELDS"))
     return out
 
 

@@ -18,7 +18,6 @@ The numpy reference ``spgemm_ref_numpy`` doubles as the CPU-library baseline
 """
 from __future__ import annotations
 
-import functools
 import time
 from typing import Tuple
 
@@ -26,6 +25,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.runtime.exec_store import persistent_jit
 
 from .formats import BsrPattern, CSR
 from .inspector import (SpGemmBlockPlan, SpGemmGatherPlan, choose_spgemm_path,
@@ -63,7 +64,7 @@ def spgemm_ref_numpy(a: CSR, b: CSR) -> CSR:
 # Gather (VPU) executor
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("c_nnz",))
+@persistent_jit(static_argnames=("c_nnz",))
 def _gather_execute(a_data, b_data, a_idx, b_idx, out_idx, c_nnz: int):
     # trailing zero slot keeps padded (dead) gathers in bounds
     a_data = jnp.concatenate([a_data, jnp.zeros(1, a_data.dtype)])
@@ -85,7 +86,7 @@ def spgemm_gather_execute(plan: SpGemmGatherPlan, a_data: np.ndarray,
         jnp.asarray(plan.out_idx), c_nnz=plan.c_nnz))
 
 
-@functools.partial(jax.jit, static_argnames=("c_cap",))
+@persistent_jit(static_argnames=("c_cap",))
 def _gather_execute_capped(a_data, b_data, a_idx, b_idx, out_idx, c_cap: int):
     """Shape-bucketed gather executor for the chunked/overlapped runtime.
 
@@ -122,7 +123,7 @@ def spgemm_gather_execute_chunk(plan: SpGemmGatherPlan, a_data: np.ndarray,
 # Block (MXU) executor — jnp fallback; Pallas kernel lives in kernels/
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("n_out",))
+@persistent_jit(static_argnames=("n_out",))
 def _block_execute_jnp(a_blocks, b_blocks, a_id, b_id, out_id, n_out: int):
     prods = jnp.einsum("tij,tjk->tik", a_blocks[a_id], b_blocks[b_id],
                        preferred_element_type=jnp.float32)

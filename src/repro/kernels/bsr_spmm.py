@@ -23,7 +23,6 @@ Two entry points:
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Optional
 
@@ -35,6 +34,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import BsrPattern, CSR, bsr_pattern_from_csr
+from repro.runtime.exec_store import persistent_jit
 from repro.core.inspector import (PatternFingerprint, fingerprint_pattern,
                                   next_pow2)
 from repro.core.rir import ScheduleBundle
@@ -115,7 +115,7 @@ def _kernel(w_id, k_blk, j_blk, is_first, is_last, x_ref, w_ref, o_ref):
                           ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n_j_blocks", "bt", "interpret"))
+@persistent_jit(static_argnames=("n_j_blocks", "bt", "interpret"))
 def bsr_spmm(x, w_blocks, w_id, k_blk, j_blk, is_first, is_last, *,
              n_j_blocks: int, bt: int = 128, interpret: bool = True):
     """out = x @ W_bsr.  x: (T, d_in); w_blocks: (n_jobs, bs, bs).
@@ -228,7 +228,7 @@ def inspect_spmm(w: CSR, block: int = 128,
                     is_first, is_last, int(kk.shape[0]), fingerprint)
 
 
-@functools.partial(jax.jit, static_argnames=("n_j",))
+@persistent_jit(static_argnames=("n_j",))
 def _spmm_execute_jnp(x_tiles, w_tiles, w_id, k_blk, j_blk, n_j: int):
     """jnp fallback executor: per-job tile dots + segment-sum over output
     block-columns (jobs are sorted by ``j_blk``)."""

@@ -36,19 +36,32 @@ hymba) do too, because right pads would pollute the carried state.
 
 Everything here is wall-clock-free: progress is step counting, so the
 trace-driven tests in ``tests/test_serve_loop.py`` are exact replays.
+Latency is *observed* (submit→first-token and per-decode-step wall times
+recorded for ``latency_summary()``) but never consulted — no scheduling
+decision reads a clock, so replays stay exact.
+
+The decode and prefill programs are ``persistent_jit`` twins of the model
+entry points, keyed by a digest of the model config + slot geometry: with
+an executable store configured (``serve.py --exec-store``), a restarted
+serve process loads both programs from disk and reaches its first streamed
+token without a single XLA compilation.  (Host-MoE decode programs embed a
+``pure_callback`` and are automatically kept process-local — the exec
+cache refuses to persist executables holding host-callback pointers.)
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
+import time
 from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import model as M
+from repro.runtime.exec_store import persistent_jit
 
 IDLE_POS = -1     # idle decode rows write position -1 — the empty sentinel
 
@@ -155,10 +168,21 @@ class ServeScheduler:
         self.completions: List[Completion] = []
         self.stats = dict(steps=0, decode_steps=0, admitted=0,
                           streamed_tokens=0, prefill_tokens=0)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
-        self._prefill = jax.jit(
-            lambda p, t, c: M.prefill(cfg, p, t, c))
+        # the closed-over cfg does not reach persistent_jit's code digest,
+        # so it (plus the slot geometry) must enter the executable key here
+        cfg_key = hashlib.blake2b(
+            f"{cfg!r}|{max_batch}|{max_seq}".encode(),
+            digest_size=8).hexdigest()
+        self._decode = persistent_jit(
+            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos),
+            key_extra=("serve_decode", cfg_key))
+        self._prefill = persistent_jit(
+            lambda p, t, c: M.prefill(cfg, p, t, c),
+            key_extra=("serve_prefill", cfg_key))
+        # latency observations (reporting only — nothing schedules off them)
+        self._t_submit_wall: Dict[int, float] = {}
+        self._ttft_s: List[float] = []
+        self._decode_step_s: List[float] = []
 
     # -- accounting ---------------------------------------------------------
 
@@ -184,6 +208,7 @@ class ServeScheduler:
             raise ValueError(f"request {req.rid}: cost {n + req.gen} exceeds "
                              f"token budget {self.token_budget}")
         self._submit_step[req.rid] = self.step_idx
+        self._t_submit_wall[req.rid] = time.perf_counter()
         self.queue.append(req)
 
     # -- slot lifecycle -----------------------------------------------------
@@ -227,6 +252,9 @@ class ServeScheduler:
             self._retire(slot)
 
     def _stream(self, st: _Slot, token: int) -> None:
+        t_sub = self._t_submit_wall.pop(st.rid, None)
+        if t_sub is not None:       # first streamed token of this request
+            self._ttft_s.append(time.perf_counter() - t_sub)
         self.stats["streamed_tokens"] += 1
         if self.on_token is not None:
             self.on_token(st.rid, token, self.step_idx)
@@ -272,7 +300,9 @@ class ServeScheduler:
             for i in active:
                 tok[i, 0] = self.slots[i].last_token
                 pos[i] = self.slots[i].pos
+            t0 = time.perf_counter()
             nxt = self._decode_batch(tok, pos)
+            self._decode_step_s.append(time.perf_counter() - t0)
             self.stats["decode_steps"] += 1
             for i in active:
                 st = self.slots[i]
@@ -289,6 +319,22 @@ class ServeScheduler:
         self.stats["steps"] += 1
         self.step_idx += 1
         return produced
+
+    def latency_summary(self) -> dict:
+        """Observed wall-time percentiles: per-request time-to-first-token
+        (submit → first streamed token, queue wait included) and per-step
+        decode latency.  Reporting only — the scheduler never reads it."""
+
+        def pcts(xs: List[float]) -> dict:
+            if not xs:
+                return dict(n=0, mean_s=0.0, p50_s=0.0, p99_s=0.0)
+            arr = np.asarray(xs)
+            return dict(n=len(xs), mean_s=float(arr.mean()),
+                        p50_s=float(np.percentile(arr, 50)),
+                        p99_s=float(np.percentile(arr, 99)))
+
+        return dict(ttft=pcts(self._ttft_s),
+                    decode_step=pcts(self._decode_step_s))
 
     def drained(self) -> bool:
         return not self.queue and not any(

@@ -17,6 +17,15 @@ and only the routing pattern crosses to the host via ``jax.pure_callback``
 into the registered ``moe_dispatch`` op, so repeated per-token routings hit
 warm bundling plans and — with ``--plan-store`` — server restarts reuse the
 plans a previous process inspected.
+
+``--exec-store DIR`` makes the *compiled programs* durable too: the
+continuous scheduler's prefill/decode executables persist via
+``runtime/exec_store.py``, so a restarted server reaches its first
+streamed token with zero XLA compiles (``--expect-zero-compiles`` turns
+that into a gated assertion — the tier1.yml warm-restart smoke).  All
+runtime flags come from the shared ``repro.runtime.add_runtime_args``
+group; the runtime is built once via ``RuntimeConfig.from_args`` and
+installed with ``set_default_runtime``.
 """
 from __future__ import annotations
 
@@ -145,6 +154,13 @@ def serve_continuous(cfg, args, rt):
           f" in {sch.stats['steps']} steps ({sch.stats['decode_steps']} "
           f"decode), {new_tokens} tokens in {total:.2f}s "
           f"({new_tokens / total:.1f} tok/s), {streamed[0]} streamed")
+    lat = sch.latency_summary()
+    print(f"[serve] latency: ttft p50={lat['ttft']['p50_s'] * 1e3:.1f}ms "
+          f"p99={lat['ttft']['p99_s'] * 1e3:.1f}ms "
+          f"(n={lat['ttft']['n']}); decode step "
+          f"p50={lat['decode_step']['p50_s'] * 1e3:.1f}ms "
+          f"p99={lat['decode_step']['p99_s'] * 1e3:.1f}ms "
+          f"(n={lat['decode_step']['n']})")
     occupancy = M.cache_slot_occupancy(sch.cache)
     if occupancy.any():
         raise SystemExit(f"[serve] ERROR: drained scheduler left orphaned "
@@ -187,14 +203,11 @@ def main(argv=None):
                     help="[--continuous] exit nonzero unless exactly this "
                          "many requests complete with streamed output "
                          "(CI smoke gate)")
-    ap.add_argument("--plan-store", default=None, metavar="DIR",
-                    help="attach a persistent plan store to this process's "
-                         "shared ReapRuntime (repro.runtime.default_runtime)"
-                         ": every registered sparse op routed through it "
-                         "loads warm inspector plans across restarts and "
-                         "write-through-persists new ones.  Combine with "
-                         "--host-moe on an MoE arch so decode-step expert "
-                         "dispatch actually routes through the runtime")
+    ap.add_argument("--expect-zero-compiles", action="store_true",
+                    help="[--continuous --exec-store] exit nonzero unless "
+                         "the serve completed with zero XLA compilations "
+                         "and >= 1 executable loaded from the store (CI "
+                         "warm-restart gate — run the same command twice)")
     ap.add_argument("--host-moe", action="store_true",
                     help="route decode-step MoE dispatch through the "
                          "runtime's registered moe_dispatch op via "
@@ -202,17 +215,26 @@ def main(argv=None):
                          "the routing pattern leaves the graph. Repeated "
                          "per-token routings hit warm bundling plans; with "
                          "--plan-store they survive restarts")
+    from repro.runtime import add_runtime_args
+    add_runtime_args(ap)
     args = ap.parse_args(argv)
 
     rt = None
-    if args.plan_store or args.host_moe:
-        from repro.runtime import configure_default_runtime
-        rt = configure_default_runtime(store_dir=args.plan_store)
+    if args.plan_store or args.exec_store or args.host_moe:
+        from repro.runtime import (ReapRuntime, RuntimeConfig,
+                                   set_default_runtime)
+        rt = set_default_runtime(
+            ReapRuntime(RuntimeConfig.from_args(args)))
         if rt.store is not None:
             s = rt.store.summary()
             print(f"[serve] plan store {args.plan_store}: {s['entries']} "
                   f"warm plans ({_store_op_report(rt)}), "
                   f"{s['bytes'] / 1e6:.2f} MB on disk")
+        if rt.exec is not None:
+            es = rt.exec.store.summary()
+            print(f"[serve] exec store {args.exec_store}: {es['entries']} "
+                  f"compiled executables, {es['bytes'] / 1e6:.2f} MB on "
+                  f"disk")
         print("[serve] registered ops (dtypes/routing, registry-enumerated):")
         print(_capability_report())
 
@@ -277,6 +299,24 @@ def main(argv=None):
             print("[serve] note: no sparse op consulted the runtime this "
                   "run — the jitted decode path routes in-graph; pass "
                   "--host-moe on an MoE arch to route dispatch through it")
+        if rt.exec is not None:
+            ex = rt.exec.summary()
+            print(f"[serve] exec cache: {ex['compiles']} XLA compiles, "
+                  f"{ex['loads']} loaded from store, {ex['saves']} "
+                  f"persisted, {ex['unserializable']} kept process-local "
+                  f"(host callbacks)")
+    if args.expect_zero_compiles:
+        if rt is None or rt.exec is None:
+            raise SystemExit("[serve] ERROR: --expect-zero-compiles "
+                             "requires --exec-store")
+        ex = rt.exec.summary()
+        if ex["compiles"] != 0 or ex["loads"] < 1:
+            raise SystemExit(
+                f"[serve] ERROR: warm restart expected zero XLA compiles "
+                f"and >=1 store load, got {ex['compiles']} compiles / "
+                f"{ex['loads']} loads (store: {ex.get('store')})")
+        print(f"[serve] warm-restart OK: zero XLA compiles, "
+              f"{ex['loads']} executables loaded from the store")
     return seqs
 
 

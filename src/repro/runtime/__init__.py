@@ -5,8 +5,12 @@ planned-op protocol (ops.py); plan_cache.py, plan_store.py and pipeline.py
 are its mechanisms; elastic.py carries the fault-tolerance posture for the
 training/serving side of the repo.
 """
-from .api import (ReapRuntime, RuntimeConfig,  # noqa: F401
-                  configure_default_runtime, default_runtime)
+from .api import (ReapRuntime, RunStats, RuntimeConfig,  # noqa: F401
+                  add_runtime_args, configure_default_runtime,
+                  default_runtime, set_default_runtime)
+from .exec_store import (ExecCache, ExecStore,  # noqa: F401
+                         current_exec_cache, persistent_jit,
+                         set_default_exec_cache, use_exec_cache)
 from .ops import (OpSpec, get_op, list_ops,  # noqa: F401
                   register_op, register_plan_type, unregister_op)
 from .pipeline import (BlockChunk, BlockChunkSet,  # noqa: F401

@@ -24,10 +24,12 @@ docs/architecture.md "Op registry").
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
-from typing import Dict, Optional, Tuple
+import warnings
+from typing import Any, Dict, Iterator, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -45,6 +47,16 @@ class RuntimeConfig:
     the manifest is consulted lazily on the first miss, and every newly
     built plan is write-through-persisted, so a restarted process starts
     warm for every pattern any previous run inspected.
+
+    ``exec_store_dir`` attaches a persistent *executable* store
+    (exec_store.ExecStore): planned executors resolve their AOT-compiled
+    programs memory → disk → XLA, so a restarted process skips compilation
+    — not just inspection — for every recurring launch-shape bucket.
+
+    This dataclass is the single source of truth for runtime
+    construction.  Entry points build it with ``RuntimeConfig.from_args``
+    over a parser extended by ``add_runtime_args``; programmatic callers
+    use the constructor or ``dataclasses.replace``.
     """
 
     cache_entries: int = 64
@@ -56,6 +68,151 @@ class RuntimeConfig:
     moe_capacity_factor: float = 1.25
     store_dir: Optional[str] = None
     store_budget_bytes: int = 1 << 30
+    exec_store_dir: Optional[str] = None
+    exec_budget_bytes: int = 1 << 30
+
+    @classmethod
+    def from_args(cls, args: Any, **overrides) -> "RuntimeConfig":
+        """Build a config from an ``add_runtime_args``-extended namespace.
+
+        The one sanctioned path from CLI flags to a runtime: serve.py,
+        the benchmarks, and the examples all construct their runtime as
+        ``ReapRuntime(RuntimeConfig.from_args(args, **entry_point_picks))``
+        instead of re-plumbing flags independently.  Missing attributes
+        are tolerated (a parser may opt into a subset of the flags), and
+        ``overrides`` — the entry point's own non-CLI choices — win last.
+        """
+        kw: Dict[str, Any] = {}
+        plan_dir = getattr(args, "plan_store", None)
+        if plan_dir is not None:
+            kw["store_dir"] = plan_dir
+        plan_mb = getattr(args, "plan_store_budget_mb", None)
+        if plan_mb is not None:
+            kw["store_budget_bytes"] = int(plan_mb * 1e6)
+        exec_dir = getattr(args, "exec_store", None)
+        if exec_dir is not None:
+            kw["exec_store_dir"] = exec_dir
+        exec_mb = getattr(args, "exec_store_budget_mb", None)
+        if exec_mb is not None:
+            kw["exec_budget_bytes"] = int(exec_mb * 1e6)
+        entries = getattr(args, "cache_entries", None)
+        if entries is not None:
+            kw["cache_entries"] = entries
+        n_chunks = getattr(args, "n_chunks", None)
+        if n_chunks is not None:
+            kw["n_chunks"] = n_chunks
+        if getattr(args, "no_overlap", False):
+            kw["overlap"] = False
+        if getattr(args, "no_pallas", False):
+            kw["use_pallas"] = False
+        kw.update(overrides)
+        return cls(**kw)
+
+
+def add_runtime_args(parser) -> None:
+    """Install the shared runtime-construction flags on ``parser``.
+
+    Every CLI entry point that builds a ``ReapRuntime`` uses this one
+    helper plus ``RuntimeConfig.from_args`` — flags mean the same thing
+    everywhere and new knobs appear everywhere at once.  Numeric defaults
+    are None so ``from_args`` only overrides what the user actually set.
+    """
+    g = parser.add_argument_group("runtime")
+    g.add_argument("--plan-store", metavar="DIR", default=None,
+                   help="persist inspection plans under DIR; restarted "
+                        "processes skip re-inspection for known patterns")
+    g.add_argument("--plan-store-budget-mb", type=float, default=None,
+                   metavar="MB", help="plan-store disk LRU budget")
+    g.add_argument("--exec-store", metavar="DIR", default=None,
+                   help="persist AOT-compiled executables under DIR; "
+                        "restarted processes skip XLA compilation for "
+                        "recurring launch-shape buckets")
+    g.add_argument("--exec-store-budget-mb", type=float, default=None,
+                   metavar="MB", help="exec-store disk LRU budget")
+    g.add_argument("--cache-entries", type=int, default=None,
+                   help="in-memory plan cache capacity")
+    g.add_argument("--n-chunks", type=int, default=None,
+                   help="inspector/executor overlap chunk count "
+                        "(1 disables chunking)")
+    g.add_argument("--no-overlap", action="store_true",
+                   help="run chunked ops synchronously")
+    g.add_argument("--no-pallas", action="store_true",
+                   help="force jnp fallback executors (no Pallas kernels)")
+
+
+@dataclasses.dataclass
+class RunStats:
+    """Typed stats record returned by ``ReapRuntime.run``.
+
+    The declared fields mirror ``ops.RUNSTATS_FIELDS`` (reaplint REAP002
+    rejects ad-hoc stats-key writes in the runtime that are not declared
+    here).  Op executors still report their own measurements (``method``,
+    ``execute_s``, overlap counters, ...) — those ride in ``extra`` and
+    stay reachable through the dict-style interface, so pre-existing
+    ``stats["method"]`` / ``stats.get("plan_s", 0.0)`` consumers are
+    unaffected.  A None field means "not applicable to this run" (e.g.
+    ``exec_cache_hit`` without an exec store) and is absent from the
+    mapping view.
+    """
+
+    cache_hit: Optional[bool] = None
+    store_hit: Optional[bool] = None
+    exec_cache_hit: Optional[bool] = None
+    fingerprint: Optional[str] = None
+    inspect_s: Optional[float] = None
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    _FIELDS = _ops.RUNSTATS_FIELDS
+
+    def __post_init__(self):
+        assert self._FIELDS == tuple(
+            f.name for f in dataclasses.fields(self) if f.name != "extra"), \
+            "RunStats fields drifted from ops.RUNSTATS_FIELDS"
+
+    # -- dict-style back-compat -------------------------------------------
+
+    def _mapping(self) -> Dict[str, Any]:
+        out = dict(self.extra)
+        for name in self._FIELDS:
+            val = getattr(self, name)
+            if val is not None:
+                out[name] = val
+        return out
+
+    def __getitem__(self, key: str) -> Any:
+        if key in self._FIELDS:
+            val = getattr(self, key)
+            if val is not None:
+                return val
+        return self.extra[key]
+
+    def get(self, key: str, default: Any = None) -> Any:
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __contains__(self, key: object) -> bool:
+        return key in self._mapping()
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._mapping())
+
+    def __len__(self) -> int:
+        return len(self._mapping())
+
+    def keys(self):
+        return self._mapping().keys()
+
+    def values(self):
+        return self._mapping().values()
+
+    def items(self):
+        return self._mapping().items()
+
+    def asdict(self) -> Dict[str, Any]:
+        """Flat dict view (JSON-friendly; None fields omitted)."""
+        return self._mapping()
 
 
 # route decisions are tiny per-pattern strings; anything bigger in the
@@ -75,6 +232,11 @@ class ReapRuntime:
         if cfg.store_dir is not None:
             from .plan_store import PlanStore
             self.store = PlanStore(cfg.store_dir, cfg.store_budget_bytes)
+        self.exec = None
+        if cfg.exec_store_dir is not None:
+            from .exec_store import ExecCache, ExecStore
+            self.exec = ExecCache(
+                ExecStore(cfg.exec_store_dir, cfg.exec_budget_bytes))
         self.cache = PlanCache(cfg.cache_entries, store=self.store)
         # routing decisions are tiny strings; keep them out of the plan
         # cache (and off the store) so they neither consume plan capacity
@@ -91,16 +253,36 @@ class ReapRuntime:
         with self._op_stats_lock:
             self._op_stats.clear()
 
+    @contextlib.contextmanager
+    def _exec_scope(self):
+        """Route executor jits through this runtime's exec cache.
+
+        Yields a probe that reports whether execution completed without
+        paying a single XLA compilation (the ``exec_cache_hit`` stat);
+        yields None when no exec store is configured, in which case
+        ``persistent_jit`` call sites degrade to plain ``jax.jit``.
+        """
+        if self.exec is None:
+            yield None
+            return
+        from .exec_store import use_exec_cache
+        before = self.exec.stats.compiles
+        with use_exec_cache(self.exec):
+            yield lambda: self.exec.stats.compiles == before
+
     # -- Generic dispatch --------------------------------------------------
 
     def run(self, op_tag: str, *operands, overlap: Optional[bool] = None,
-            **kw) -> Tuple[object, dict]:
+            **kw) -> Tuple[object, "RunStats"]:
         """Execute a registered planned op through the cache/pipeline.
 
         Returns ``(result, stats)``; ``result`` is op-defined (the
-        back-compat wrappers unpack it).  ``stats`` always carries
-        ``cache_hit`` and ``fingerprint``; synchronous calls also get
-        ``inspect_s`` (plan acquisition time — ≈ digest cost when warm).
+        back-compat wrappers unpack it).  ``stats`` is a ``RunStats``
+        (dict-compatible): always ``cache_hit`` and ``fingerprint``;
+        synchronous calls also get ``inspect_s`` (plan acquisition time —
+        ≈ digest cost when warm); with an exec store configured,
+        ``exec_cache_hit`` reports whether execution needed zero new XLA
+        compilations.
         """
         spec = _ops.get_op(op_tag)
         hops = 0
@@ -124,32 +306,38 @@ class ReapRuntime:
             kw = spec.prepare(operands, cfg, **kw)   # inspect both need
         fp = spec.fingerprint(operands, cfg, chunked=chunked, **kw)
 
-        if chunked:
-            cached, source = self.cache.get_with_source(fp)
-            self._record_op(op_tag, source)
-            result, stats, artifact = spec.execute_chunked(
-                cached, operands, cfg, overlap=overlap, **kw)
-            if cached is None and artifact is not None:
-                try:
-                    artifact.fingerprint = fp
-                except (AttributeError, TypeError):
-                    pass    # custom artifacts need not carry a slot
-                self.cache.put(fp, artifact)
-            hit = cached is not None
-        else:
-            t0 = time.perf_counter()
-            plan, source = self.cache.get_with_source(fp)
-            self._record_op(op_tag, source)
-            if plan is None:
-                plan = spec.inspect(operands, cfg, fp, **kw)
-                self.cache.put(fp, plan)
-            inspect_s = time.perf_counter() - t0
-            hit = source is not None
-            result, stats = spec.execute_sync(plan, operands, cfg,
-                                              overlap=overlap, **kw)
-            stats["inspect_s"] = inspect_s
-        stats.update(cache_hit=hit, fingerprint=fp.digest)
-        return result, stats
+        inspect_s: Optional[float] = None
+        with self._exec_scope() as exec_probe:
+            if chunked:
+                cached, source = self.cache.get_with_source(fp)
+                self._record_op(op_tag, source)
+                result, op_stats, artifact = spec.execute_chunked(
+                    cached, operands, cfg, overlap=overlap, **kw)
+                if cached is None and artifact is not None:
+                    try:
+                        artifact.fingerprint = fp
+                    except (AttributeError, TypeError):
+                        pass    # custom artifacts need not carry a slot
+                    self.cache.put(fp, artifact)
+                hit = cached is not None
+            else:
+                t0 = time.perf_counter()
+                plan, source = self.cache.get_with_source(fp)
+                self._record_op(op_tag, source)
+                if plan is None:
+                    plan = spec.inspect(operands, cfg, fp, **kw)
+                    self.cache.put(fp, plan)
+                inspect_s = time.perf_counter() - t0
+                hit = source is not None
+                result, op_stats = spec.execute_sync(plan, operands, cfg,
+                                                     overlap=overlap, **kw)
+        return result, RunStats(
+            cache_hit=hit,
+            store_hit=source == "store",
+            exec_cache_hit=exec_probe() if exec_probe is not None else None,
+            fingerprint=fp.digest,
+            inspect_s=inspect_s,
+            extra=dict(op_stats))
 
     def _record_op(self, op_tag: str, source: Optional[str]) -> None:
         """Tally the per-op split at cache-acquisition time — the same
@@ -219,6 +407,8 @@ class ReapRuntime:
         out["per_op"] = per_op
         if self.store is not None:
             out["store"] = self.store.summary()
+        if self.exec is not None:
+            out["exec"] = self.exec.summary()
         return out
 
 
@@ -233,14 +423,31 @@ def default_runtime() -> ReapRuntime:
     return _DEFAULT
 
 
-def configure_default_runtime(config: Optional[RuntimeConfig] = None,
-                              **overrides) -> ReapRuntime:
-    """(Re)build the process-wide runtime — e.g. to attach a plan store.
+def set_default_runtime(rt: Optional[ReapRuntime]) -> Optional[ReapRuntime]:
+    """Install ``rt`` as the process-wide runtime.
 
-    ``launch/serve.py --plan-store DIR`` calls this before serving so every
-    component that reaches for ``default_runtime()`` shares one store-backed
-    cache and decode restarts start warm.
+    ``launch/serve.py`` calls this with its ``from_args``-built runtime
+    before serving, so every component that reaches for
+    ``default_runtime()`` shares one store-backed cache.  The runtime's
+    exec cache (if configured) also becomes the process default, so
+    ``persistent_jit`` call sites *outside* ``run()`` — the serve
+    scheduler's decode/prefill programs — resolve through the same
+    executable store.
     """
     global _DEFAULT
-    _DEFAULT = ReapRuntime(config, **overrides)
-    return _DEFAULT
+    _DEFAULT = rt
+    from .exec_store import set_default_exec_cache
+    set_default_exec_cache(None if rt is None else rt.exec)
+    return rt
+
+
+def configure_default_runtime(config: Optional[RuntimeConfig] = None,
+                              **overrides) -> ReapRuntime:
+    """Deprecated: build via ``RuntimeConfig`` (or ``from_args``) and
+    install with ``set_default_runtime`` instead."""
+    warnings.warn(
+        "configure_default_runtime is deprecated; build a RuntimeConfig "
+        "(RuntimeConfig.from_args for CLI entry points) and install it "
+        "with set_default_runtime(ReapRuntime(cfg))",
+        DeprecationWarning, stacklevel=2)
+    return set_default_runtime(ReapRuntime(config, **overrides))

@@ -1,0 +1,758 @@
+"""Executable persistence: warm restarts that skip XLA, not just inspection.
+
+The plan store (plan_store.py) makes the *organization* half of the REAP
+split durable; this module does the same for the *computation* half.  Every
+process restart still paid full Pallas/XLA compilation before the first
+result — for a serving fleet the hot path starts at process launch, so
+time-to-first-token must be warm too (the Sparse Stream Semantic Registers
+argument at the process level: keep setup machinery off the hot path
+entirely).  Three layers:
+
+``persistent_jit``
+    A drop-in for ``jax.jit(fn, static_argnames=...)``.  With no exec
+    cache installed it *is* ``jax.jit`` (zero behavior change); with one
+    installed (``use_exec_cache`` / ``set_default_exec_cache``) each call
+    resolves an AOT-compiled executable through memory → disk → compile.
+    Executors keep their exact call convention: dynamic operands
+    positional, statics by keyword.
+
+``ExecCache``
+    The per-process resolution layer.  Key = (function code digest +
+    caller ``key_extra`` + static kwargs + operand tree/shape/dtype
+    signature + environment).  Because plans pad launch shapes to pow-2
+    caps (``bucket_block_schedule`` / ``next_pow2``), the operand
+    signature *is* the pow-2 launch-shape bucket — recurring patterns
+    collapse onto few keys.  Counts ``compiles`` (the "did we pay XLA"
+    counter the warm-restart gates read), ``mem_hits``, ``loads``.
+
+``ExecStore``
+    The durable layer: ``jax.experimental.serialize_executable`` payloads
+    under the same manifest discipline as the plan store — schema-versioned
+    ``manifest.json``, sha256 payload integrity with silent
+    recompile-on-corruption, atomic writes, byte-budget disk LRU, flock
+    merge-on-write for multi-process sharing, and a ``ls/verify/gc`` CLI.
+    Entries record the environment (jaxlib version, device kind, backend,
+    x64 mode) they were compiled under; a mismatch is a *miss*, never a
+    crash — the caller recompiles and re-persists for the new environment.
+
+Executables whose lowered module calls back into the host (``pure_callback``
+custom calls — e.g. the MoE decode dispatch hop) are never persisted: the
+callback pointer dies with the process, so a deserialized copy could crash.
+They are detected in the StableHLO text before serialization and kept as
+ordinary per-process compiles.
+
+Payload format note: serialized executables carry pickled pytree defs (the
+``jax.experimental.serialize_executable`` contract), so like JAX's own
+compilation cache the store directory must be trusted — sha256 integrity
+protects against corruption, not against an adversarial payload author.
+
+CLI (``python -m repro.runtime.exec_store``)::
+
+    python -m repro.runtime.exec_store ls     <store-dir>
+    python -m repro.runtime.exec_store verify <store-dir> [--prune]
+    python -m repro.runtime.exec_store gc     <store-dir> [--budget-mb N]
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import hashlib
+import os
+import pickle
+import threading
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+try:
+    import fcntl
+except ImportError:                      # non-POSIX: lockless best-effort
+    fcntl = None
+
+SCHEMA_VERSION = 1
+MANIFEST = "manifest.json"
+EXE_DIR = "exe"
+LOCKFILE = "manifest.lock"
+
+#: StableHLO custom-call markers whose presence makes an executable
+#: process-bound (host callback pointers die with the process)
+_UNSERIALIZABLE_MARKERS = ("xla_python_cpu_callback", "xla_ffi_python",
+                           "CallbackOperand", "python_callback")
+
+
+# ---------------------------------------------------------------------------
+# Environment identity: what invalidates a persisted executable wholesale
+# ---------------------------------------------------------------------------
+
+def environment() -> Dict[str, str]:
+    """The compatibility envelope of a compiled executable.
+
+    jaxlib version and device kind are the hard compatibility axes
+    (serialized executables embed machine code); backend and the x64 flag
+    change lowering.  Any difference between a stored entry's environment
+    and the current one is a miss — never an error.
+    """
+    import jax
+    import jaxlib
+    dev = jax.devices()[0]
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "device_kind": dev.device_kind,
+        "backend": dev.platform,
+        "x64": str(bool(jax.config.jax_enable_x64)),
+    }
+
+
+def _code_digest(fn) -> str:
+    """Stable identity of a function's *code* across processes.
+
+    Compiled artifacts must not outlive the Python that lowered them, so
+    the key folds in the bytecode and constants (recursively for nested
+    code objects — the lowered function usually closes over helpers).
+    """
+    h = hashlib.blake2b(digest_size=12)
+
+    def feed(code):
+        h.update(code.co_code)
+        for c in code.co_consts:
+            if hasattr(c, "co_code"):
+                feed(c)
+            else:
+                h.update(repr(c).encode())
+    try:
+        feed(fn.__code__)
+    except AttributeError:       # partials / callables: name-only identity
+        h.update(repr(fn).encode())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# ExecStore: the durable layer (same manifest discipline as the plan store)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExecStoreStats:
+    """Per-process counters (the manifest carries the durable state)."""
+
+    loads: int = 0       # executables deserialized from disk
+    saves: int = 0       # executables persisted
+    corrupt: int = 0     # entries dropped on integrity/deserialize failure
+    env_miss: int = 0    # entries skipped for environment mismatch
+    evicted: int = 0     # entries removed by the byte-budget gc
+    errors: int = 0      # non-fatal persistence failures (kept computing)
+    load_s: float = 0.0  # seconds spent in successful loads
+
+
+class ExecStore:
+    """Disk store of serialized compiled executables, keyed by exec key.
+
+    Thread-safe within a process; across processes the manifest takes the
+    same advisory ``manifest.lock`` + merge-on-write protocol as the plan
+    store, and payloads are content-addressed and atomically replaced.
+    ``byte_budget=None`` disables the disk LRU.
+    """
+
+    #: seconds to wait for the cross-process manifest lock before falling
+    #: through to an unmerged (in-memory-view) write
+    lock_timeout: float = 2.0
+
+    def __init__(self, root, byte_budget: Optional[int] = 1 << 30):
+        self.root = Path(root)
+        self.byte_budget = byte_budget
+        self.stats = ExecStoreStats()
+        self.env = environment()
+        self._entries: Optional[Dict[str, dict]] = None   # lazy manifest
+        self._lock = threading.Lock()
+
+    # -- locking (flock OUTER, self._lock inner — same order everywhere) --
+
+    @contextlib.contextmanager
+    def _manifest_flock(self, timeout: Optional[float] = None):
+        if fcntl is None:
+            yield False
+            return
+        timeout = self.lock_timeout if timeout is None else timeout
+        try:
+            self.root.mkdir(parents=True, exist_ok=True)
+            fh = open(self.root / LOCKFILE, "a+")
+        except OSError:
+            yield False
+            return
+        got = False
+        deadline = time.monotonic() + timeout
+        try:
+            while True:
+                try:
+                    fcntl.flock(fh, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                    got = True
+                    break
+                except OSError:
+                    if time.monotonic() >= deadline:
+                        break
+                    time.sleep(0.02)
+            yield got
+        finally:
+            if got:
+                try:
+                    fcntl.flock(fh, fcntl.LOCK_UN)
+                except OSError:
+                    pass
+            fh.close()
+
+    # -- manifest ----------------------------------------------------------
+
+    @property
+    def _exe(self) -> Path:
+        return self.root / EXE_DIR
+
+    def _manifest_path(self) -> Path:
+        return self.root / MANIFEST
+
+    def _load_manifest_locked(self) -> Dict[str, dict]:
+        if self._entries is not None:
+            return self._entries
+        path = self._manifest_path()
+        entries: Dict[str, dict] = {}
+        try:
+            import json
+            data = json.loads(path.read_text())
+            if data.get("schema") != SCHEMA_VERSION:
+                raise ValueError(f"manifest schema {data.get('schema')!r} "
+                                 f"!= {SCHEMA_VERSION}")
+            entries = dict(data["entries"])
+        except FileNotFoundError:
+            pass
+        except Exception:
+            # corrupt json / wrong schema: move aside, restart empty —
+            # never crash a running job over stale cache state
+            self.stats.corrupt += 1
+            try:
+                path.replace(path.with_suffix(".corrupt"))
+            except OSError:
+                pass
+        self._entries = entries
+        return entries
+
+    def _write_manifest_locked(self) -> None:
+        import json
+        self.root.mkdir(parents=True, exist_ok=True)
+        payload = json.dumps({"schema": SCHEMA_VERSION,
+                              "entries": self._entries or {}},
+                             sort_keys=True, indent=1)
+        tmp = self._manifest_path().with_name(
+            f".{MANIFEST}.tmp-{os.getpid()}")
+        tmp.write_text(payload)
+        os.replace(tmp, self._manifest_path())
+
+    def _drop_locked(self, key: str) -> None:
+        ent = (self._entries or {}).pop(key, None)
+        if ent is not None:
+            try:
+                (self._exe / ent["payload"]).unlink()
+            except OSError:
+                pass
+
+    # -- core API ----------------------------------------------------------
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._load_manifest_locked())
+
+    def get(self, key: str):
+        """Load + deserialize the executable persisted under ``key``.
+
+        Returns the loaded callable or None.  Environment mismatch is a
+        plain miss (``stats.env_miss``); integrity/deserialize failures
+        drop the entry and miss (``stats.corrupt``) so the caller
+        recompiles and write-through re-persists a good copy.
+        """
+        t0 = time.perf_counter()
+        with self._lock:
+            ent = self._load_manifest_locked().get(key)
+            if ent is None:
+                return None
+            if ent.get("env") != self.env:
+                self.stats.env_miss += 1
+                return None
+            path = self._exe / ent["payload"]
+        try:
+            blob = path.read_bytes()
+            if hashlib.sha256(blob).hexdigest() != ent["sha256"]:
+                raise ValueError(f"payload digest mismatch for {key}")
+            from jax.experimental import serialize_executable as _se
+            payload, in_tree, out_tree = pickle.loads(blob)
+            loaded = _se.deserialize_and_load(payload, in_tree, out_tree)
+        except Exception:
+            self.stats.corrupt += 1
+            with self._manifest_flock() as locked:
+                with self._lock:
+                    if locked:
+                        self._entries = None    # merge concurrent writers
+                        self._load_manifest_locked()
+                    cur = (self._entries or {}).get(key)
+                    if cur is not None and \
+                            cur.get("sha256") != ent["sha256"]:
+                        # our manifest view was stale; a concurrent writer
+                        # re-persisted this key — leave its entry alone
+                        return None
+                    self._drop_locked(key)
+                    try:
+                        self._write_manifest_locked()
+                    except OSError:
+                        self.stats.errors += 1
+            return None
+        self.stats.loads += 1
+        self.stats.load_s += time.perf_counter() - t0
+        return loaded
+
+    def put(self, key: str, compiled, label: str = "") -> bool:
+        """Serialize + atomically persist one compiled executable.
+
+        Returns True on success.  IO/serialization failures are counted
+        and swallowed — persistence is best-effort, computation never
+        fails on disk.
+        """
+        try:
+            from jax.experimental import serialize_executable as _se
+            blob = pickle.dumps(_se.serialize(compiled))
+            with self._manifest_flock() as locked:
+                with self._lock:
+                    if locked:
+                        self._entries = None    # merge-write freshest view
+                    entries = self._load_manifest_locked()
+                    self._exe.mkdir(parents=True, exist_ok=True)
+                    tmp = self._exe / f".{key}.bin.tmp-{os.getpid()}"
+                    tmp.write_bytes(blob)
+                    os.replace(tmp, self._exe / f"{key}.bin")
+                    now = time.time()
+                    entries[key] = {
+                        "payload": f"{key}.bin",
+                        "sha256": hashlib.sha256(blob).hexdigest(),
+                        "bytes": len(blob),
+                        "env": dict(self.env),
+                        "label": label,
+                        "saved_at": now,
+                        "last_used": now}
+                    self._gc_locked(self.byte_budget)
+                    self._write_manifest_locked()
+            self.stats.saves += 1
+            return True
+        except Exception:
+            self.stats.errors += 1
+            return False
+
+    # -- maintenance -------------------------------------------------------
+
+    def _gc_locked(self, byte_budget: Optional[int],
+                   sweep: bool = False) -> List[str]:
+        entries = self._load_manifest_locked()
+        evicted: List[str] = []
+        if byte_budget is not None:
+            total = sum(int(e["bytes"]) for e in entries.values())
+            for key, _ in sorted(entries.items(),
+                                 key=lambda kv: kv[1]["last_used"]):
+                if total <= byte_budget:
+                    break
+                total -= int(entries[key]["bytes"])
+                self._drop_locked(key)
+                evicted.append(key)
+        # orphan sweep only from explicit maintenance — a put-time sweep
+        # against a stale manifest view would delete concurrent writers'
+        # payloads and in-flight temp files
+        if sweep and self._exe.is_dir():
+            owned = {e["payload"] for e in entries.values()}
+            now = time.time()
+            for f in self._exe.iterdir():
+                if f.name in owned:
+                    continue
+                try:
+                    if f.name.startswith(".") and \
+                            now - f.stat().st_mtime < 3600:
+                        continue
+                    f.unlink()
+                except OSError:
+                    pass
+        self.stats.evicted += len(evicted)
+        return evicted
+
+    def gc(self, byte_budget: Optional[int] = None) -> List[str]:
+        """Evict LRU entries beyond the byte budget; sweep orphan files."""
+        with self._manifest_flock():
+            with self._lock:
+                self._entries = None    # maintenance acts on freshest view
+                evicted = self._gc_locked(
+                    self.byte_budget if byte_budget is None
+                    else byte_budget, sweep=True)
+                self._write_manifest_locked()
+        return evicted
+
+    def verify(self, prune: bool = False) -> dict:
+        """Check every payload's sha256 + deserializability + environment.
+
+        Returns {"ok": [...], "corrupt": [...], "stale_env": [...],
+        "orphans": [...]}; ``prune=True`` drops corrupt/stale entries and
+        orphan files.
+        """
+        with self._lock:
+            entries = dict(self._load_manifest_locked())
+        ok, corrupt, stale = [], [], []
+        for key, ent in entries.items():
+            try:
+                blob = (self._exe / ent["payload"]).read_bytes()
+                if hashlib.sha256(blob).hexdigest() != ent["sha256"]:
+                    raise ValueError("digest mismatch")
+            except Exception:
+                corrupt.append(key)
+                continue
+            if ent.get("env") != self.env:
+                stale.append(key)
+            else:
+                ok.append(key)
+        owned = {e["payload"] for e in entries.values()}
+        orphans = ([f.name for f in self._exe.iterdir()
+                    if f.name not in owned]
+                   if self._exe.is_dir() else [])
+        if prune and (corrupt or stale or orphans):
+            with self._manifest_flock():
+                with self._lock:
+                    for key in corrupt + stale:
+                        self._drop_locked(key)
+                    self._gc_locked(self.byte_budget, sweep=True)
+                    self._write_manifest_locked()
+            self.stats.corrupt += len(corrupt)
+        return {"ok": ok, "corrupt": corrupt, "stale_env": stale,
+                "orphans": orphans}
+
+    def clear(self) -> None:
+        with self._manifest_flock():
+            with self._lock:
+                self._entries = None
+                self._load_manifest_locked()
+                for key in list(self._entries or {}):
+                    self._drop_locked(key)
+                self._gc_locked(0, sweep=True)
+                self._write_manifest_locked()
+
+    def summary(self) -> dict:
+        with self._lock:
+            entries = self._load_manifest_locked()
+            return dict(entries=len(entries),
+                        bytes=sum(int(e["bytes"]) for e in entries.values()),
+                        loads=self.stats.loads, saves=self.stats.saves,
+                        load_s=self.stats.load_s,
+                        corrupt=self.stats.corrupt,
+                        env_miss=self.stats.env_miss,
+                        evicted=self.stats.evicted,
+                        errors=self.stats.errors)
+
+
+# ---------------------------------------------------------------------------
+# ExecCache: memory → disk → compile, with the compile counter the gates read
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExecCacheStats:
+    compiles: int = 0        # XLA compilations paid through the cache
+    mem_hits: int = 0        # answered from the in-process table
+    loads: int = 0           # answered by deserializing from the store
+    saves: int = 0           # newly compiled executables persisted
+    unserializable: int = 0  # compiles kept process-local (host callbacks)
+    compile_s: float = 0.0   # seconds spent lowering+compiling
+    load_s: float = 0.0      # seconds spent loading from the store
+
+
+class ExecCache:
+    """Per-process executable resolution: in-memory table over an ExecStore.
+
+    ``store=None`` still deduplicates same-key compiles in memory (useful
+    on its own: one AOT compile per launch-shape bucket), it just has
+    nothing durable to consult.  ``on_compile`` is an optional hook fired
+    with the key label on every paid compilation — the test harness counts
+    compiles through it.
+    """
+
+    def __init__(self, store: Optional[ExecStore] = None):
+        self.store = store
+        self.stats = ExecCacheStats()
+        self.on_compile = None
+        self._mem: Dict[tuple, object] = {}
+        self._lock = threading.Lock()
+
+    def _disk_key(self, key: tuple) -> str:
+        return hashlib.blake2b(repr(key).encode(),
+                               digest_size=16).hexdigest()
+
+    def lookup(self, key: tuple):
+        """Memory → disk probe (no compile). Returns a callable or None."""
+        with self._lock:
+            hit = self._mem.get(key)
+        if hit is not None:
+            self.stats.mem_hits += 1
+            return hit
+        if self.store is not None:
+            t0 = time.perf_counter()
+            loaded = self.store.get(self._disk_key(key))
+            if loaded is not None:
+                self.stats.loads += 1
+                self.stats.load_s += time.perf_counter() - t0
+                with self._lock:
+                    self._mem[key] = loaded
+                return loaded
+        return None
+
+    def compile_and_admit(self, key: tuple, lowered, label: str = ""):
+        """AOT-compile a lowered computation, persist when safe, admit.
+
+        The lowered module's StableHLO is scanned for host-callback custom
+        calls first: those executables are process-bound (the callback
+        pointer dies with the process) and are admitted to memory only.
+        """
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        self.stats.compile_s += time.perf_counter() - t0
+        self.stats.compiles += 1
+        if self.on_compile is not None:
+            self.on_compile(label)
+        persistable = True
+        try:
+            text = lowered.as_text()
+            if any(m in text for m in _UNSERIALIZABLE_MARKERS):
+                persistable = False
+        except Exception:
+            persistable = False
+        if not persistable:
+            self.stats.unserializable += 1
+        elif self.store is not None:
+            if self.store.put(self._disk_key(key), compiled, label=label):
+                self.stats.saves += 1
+        with self._lock:
+            self._mem[key] = compiled
+        return compiled
+
+    def summary(self) -> dict:
+        out = dataclasses.asdict(self.stats)
+        out["mem_entries"] = len(self._mem)
+        if self.store is not None:
+            out["store"] = self.store.summary()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The process-default / context exec cache persistent_jit consults
+# ---------------------------------------------------------------------------
+
+_DEFAULT_EXEC: Optional[ExecCache] = None
+_CONTEXT_EXEC: contextvars.ContextVar = contextvars.ContextVar(
+    "reap_exec_cache", default=None)
+
+
+def set_default_exec_cache(cache: Optional[ExecCache]) -> None:
+    """Install (or clear) the process-wide exec cache.
+
+    ``runtime.set_default_runtime`` calls this so every ``persistent_jit``
+    call site — registry executors and the serve scheduler alike — resolves
+    executables through the configured store.
+    """
+    global _DEFAULT_EXEC
+    _DEFAULT_EXEC = cache
+
+
+def current_exec_cache() -> Optional[ExecCache]:
+    """The exec cache in effect: innermost ``use_exec_cache`` or default."""
+    ctx = _CONTEXT_EXEC.get()
+    return ctx if ctx is not None else _DEFAULT_EXEC
+
+
+@contextlib.contextmanager
+def use_exec_cache(cache: Optional[ExecCache]):
+    """Scoped override: ``ReapRuntime.run`` wraps execution in its own
+    cache so per-runtime stores work without global mutation."""
+    token = _CONTEXT_EXEC.set(cache)
+    try:
+        yield cache
+    finally:
+        _CONTEXT_EXEC.reset(token)
+
+
+# ---------------------------------------------------------------------------
+# persistent_jit: the drop-in jit wrapper executors adopt
+# ---------------------------------------------------------------------------
+
+class PersistentJitFn:
+    """``jax.jit`` twin whose call-site cache can be made durable.
+
+    Call convention: dynamic operands positional, static parameters by
+    keyword (exactly how the repo's executors already call their jitted
+    helpers).  With no exec cache in effect, calls delegate straight to
+    the wrapped ``jax.jit`` function; with one, each distinct
+    (code, statics, operand-signature, environment) key is resolved
+    memory → store → AOT compile.
+    """
+
+    def __init__(self, fn, static_argnames: Tuple[str, ...] = (),
+                 key_extra: Tuple = ()):
+        self._fn = fn
+        self._static = tuple(static_argnames)
+        self._key_extra = tuple(key_extra)
+        self._jit = _jax().jit(fn, static_argnames=self._static) \
+            if self._static else _jax().jit(fn)
+        self._code_key = _code_digest(fn)
+        self._aot_compiles = 0
+        self.__name__ = getattr(fn, "__name__", "persistent_jit_fn")
+        self.__doc__ = getattr(fn, "__doc__", None)
+
+    def _label(self) -> str:
+        mod = getattr(self._fn, "__module__", "?")
+        return f"{mod}.{self.__name__}"
+
+    def _signature(self, args) -> tuple:
+        import jax
+        leaves, treedef = jax.tree_util.tree_flatten(args)
+        sig = []
+        for x in leaves:
+            shape = getattr(x, "shape", None)
+            dtype = getattr(x, "dtype", None)
+            if shape is None or dtype is None:
+                # python scalar leaf: its value is baked by tracing
+                sig.append(("py", repr(x)))
+            else:
+                # weak_type participates: avals differing only in weakness
+                # lower differently and must not share an executable
+                sig.append((tuple(shape), str(dtype),
+                            bool(getattr(x, "weak_type", False))))
+        return (str(treedef), tuple(sig))
+
+    def __call__(self, *args, **kw):
+        cache = current_exec_cache()
+        if cache is None:
+            return self._jit(*args, **kw)
+        unknown = set(kw) - set(self._static)
+        if unknown:
+            # dynamic kwargs are not part of the persistent call
+            # convention; stay on the plain jit path rather than mis-key
+            return self._jit(*args, **kw)
+        statics = tuple(sorted((k, repr(v)) for k, v in kw.items()))
+        key = (self._label(), self._code_key, self._key_extra, statics,
+               self._signature(args), tuple(sorted(cache_env(cache).items())))
+        compiled = cache.lookup(key)
+        if compiled is None:
+            lowered = self._jit.lower(*args, **kw)
+            compiled = cache.compile_and_admit(key, lowered,
+                                               label=self._label())
+            self._aot_compiles += 1
+        return compiled(*args)
+
+    def lower(self, *args, **kw):
+        return self._jit.lower(*args, **kw)
+
+    def _cache_size(self) -> int:
+        """Compile count parity with ``jax.jit``'s introspection hook:
+        jit-path entries plus AOT compiles paid through the exec cache."""
+        return self._jit._cache_size() + self._aot_compiles
+
+
+def cache_env(cache: ExecCache) -> Dict[str, str]:
+    """Environment identity for keying (store's view when attached)."""
+    if cache.store is not None:
+        return cache.store.env
+    return environment()
+
+
+def _jax():
+    import jax
+    return jax
+
+
+def persistent_jit(fn=None, *, static_argnames: Tuple[str, ...] = (),
+                   key_extra: Tuple = ()):
+    """Decorator/factory form: ``@persistent_jit(static_argnames=("n",))``.
+
+    ``key_extra`` folds extra caller context into the executable key —
+    e.g. the serve scheduler keys its decode program by model-config
+    digest so two architectures never collide on one executable.
+    """
+    if fn is not None:
+        return PersistentJitFn(fn, static_argnames, key_extra)
+    return lambda f: PersistentJitFn(f, static_argnames, key_extra)
+
+
+# ---------------------------------------------------------------------------
+# CLI: ls / verify / gc
+# ---------------------------------------------------------------------------
+
+def _cli_ls(store: ExecStore) -> int:
+    with store._lock:
+        entries = store._load_manifest_locked()
+    if not entries:
+        print(f"exec store {store.root}: empty")
+        return 0
+    total, stale = 0, 0
+    now = time.time()
+    print(f"{'key':<34} {'kB':>9} {'age':>8} {'env':>6}  label")
+    for key, ent in sorted(entries.items(), key=lambda kv: -kv[1]["bytes"]):
+        total += int(ent["bytes"])
+        match = ent.get("env") == store.env
+        stale += 0 if match else 1
+        age_h = (now - ent["saved_at"]) / 3600.0
+        print(f"{key:<34} {ent['bytes'] / 1e3:>9.1f} {age_h:>7.1f}h "
+              f"{'ok' if match else 'stale':>6}  {ent.get('label', '')}")
+    print(f"total: {len(entries)} executables, {total / 1e6:.2f} MB"
+          f"{f', {stale} stale-env' if stale else ''}")
+    return 0
+
+
+def _cli_verify(store: ExecStore, prune: bool) -> int:
+    report = store.verify(prune=prune)
+    print(f"exec store {store.root}: {len(report['ok'])} ok, "
+          f"{len(report['corrupt'])} corrupt, "
+          f"{len(report['stale_env'])} stale-env, "
+          f"{len(report['orphans'])} orphan files"
+          f"{' (pruned)' if prune and (report['corrupt'] or report['stale_env'] or report['orphans']) else ''}")
+    for key in report["corrupt"]:
+        print(f"  corrupt:   {key}")
+    for key in report["stale_env"]:
+        print(f"  stale-env: {key}")
+    for name in report["orphans"]:
+        print(f"  orphan:    {name}")
+    return 1 if report["corrupt"] and not prune else 0
+
+
+def _cli_gc(store: ExecStore, budget_mb: Optional[float]) -> int:
+    budget = None if budget_mb is None else int(budget_mb * 1e6)
+    evicted = store.gc(budget)
+    print(f"exec store {store.root}: evicted {len(evicted)} entries"
+          f" → {store.summary()['bytes'] / 1e6:.2f} MB on disk")
+    for key in evicted:
+        print(f"  evicted: {key}")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.runtime.exec_store",
+        description="Inspect and maintain a persistent executable store.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p_ls = sub.add_parser("ls", help="list persisted executables")
+    p_ls.add_argument("store", help="store directory")
+    p_v = sub.add_parser("verify", help="check payload integrity + env")
+    p_v.add_argument("store", help="store directory")
+    p_v.add_argument("--prune", action="store_true",
+                     help="drop corrupt/stale entries and orphan files")
+    p_gc = sub.add_parser("gc", help="evict LRU entries beyond the budget")
+    p_gc.add_argument("store", help="store directory")
+    p_gc.add_argument("--budget-mb", type=float, default=None,
+                      help="byte budget in MB (default: store default 1 GB)")
+    args = ap.parse_args(argv)
+    store = ExecStore(args.store)
+    if args.cmd == "ls":
+        return _cli_ls(store)
+    if args.cmd == "verify":
+        return _cli_verify(store, args.prune)
+    return _cli_gc(store, args.budget_mb)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -56,6 +56,13 @@ PATTERN_ATTRS: Tuple[str, ...] = (
 # shape); "in_graph" = the op also ships a traced/jitted routing variant
 # that lives inside a compiled graph (e.g. moe_dispatch's in-graph twin)
 CAPABILITY_ROUTINGS: Tuple[str, ...] = ("host", "in_graph")
+# the declared fields of ``api.RunStats`` — the only keys the runtime may
+# set on a run's stats record.  REAP002 enforces this machine-readably:
+# ad-hoc ``stats["new_key"] = ...`` writes in protected runtime modules
+# are violations until the key is declared here (and as a RunStats field),
+# so the typed stats surface and the linted one cannot drift apart.
+RUNSTATS_FIELDS: Tuple[str, ...] = (
+    "cache_hit", "store_hit", "exec_cache_hit", "fingerprint", "inspect_s")
 
 
 @dataclasses.dataclass(frozen=True)

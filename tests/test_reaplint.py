@@ -106,6 +106,41 @@ class TestReap002Registry:
                                  ("repro/launch/serve.py", api)])
         assert report2.ok
 
+    def test_undeclared_runstats_kwarg_in_generic_module(self):
+        # REAP002d: RunStats fields are the declared schema — a new kwarg
+        # in a protected runtime module must be added to RUNSTATS_FIELDS
+        src = ("def run(hit):\n"
+               "    return RunStats(cache_hit=hit, surprise=1,\n"
+               "                    extra={'op': 'x'})\n")
+        report = check_source(src, "repro/runtime/api.py")
+        assert [(d.code, d.line) for d in report.violations] == [
+            ("REAP002", 2)]
+        assert "surprise" in report.violations[0].message
+        assert "RUNSTATS_FIELDS" in report.violations[0].message
+        # declared fields + the extra= passthrough are clean
+        ok = ("def run(hit):\n"
+              "    return RunStats(cache_hit=hit, store_hit=False,\n"
+              "                    exec_cache_hit=None, extra={})\n")
+        assert check_source(ok, "repro/runtime/api.py").ok
+        # outside the protected modules the same call is unchecked
+        assert check_source(src, "repro/launch/serve.py").ok
+
+    def test_adhoc_stats_subscript_write_in_generic_module(self):
+        src = ("def run(stats):\n"
+               "    stats['made_up_key'] = 1\n"
+               "    return stats\n")
+        report = check_source(src, "repro/runtime/plan_cache.py")
+        assert [(d.code, d.line) for d in report.violations] == [
+            ("REAP002", 2)]
+        assert "made_up_key" in report.violations[0].message
+        # a declared field written through a stats mapping is fine, and
+        # non-stats dicts are out of scope entirely
+        ok = ("def run(stats, table):\n"
+              "    stats['cache_hit'] = True\n"
+              "    table['made_up_key'] = 1\n"
+              "    return stats\n")
+        assert check_source(ok, "repro/runtime/plan_cache.py").ok
+
 
 class TestReap003Sync:
     BAD = (
@@ -191,6 +226,11 @@ class TestReap004Shapes:
         "def _block_execute(vals, n_out):\n"
         "    return seg(vals, num_segments=n_out + 1)\n")
 
+    PERSISTENT = (
+        "@persistent_jit(static_argnames=('n_out',))\n"
+        "def _block_execute(vals, n_out):\n"
+        "    return seg(vals, num_segments=n_out + 1)\n")
+
     def test_bad_fires(self):
         report = check_source(self.BAD, "core/fixture.py")
         assert codes_and_lines(report) == [("REAP004", 2)]
@@ -203,6 +243,11 @@ class TestReap004Shapes:
         # inside jit the shapes are already static args; REAP004 is about
         # the launch sites that choose them
         assert check_source(self.JITTED, "core/fixture.py").ok
+
+    def test_persistent_jit_bodies_are_exempt(self):
+        # the exec-store wrapper lowers through jax.jit; its body has the
+        # same traced-shape semantics, so the jit exemption applies
+        assert check_source(self.PERSISTENT, "core/fixture.py").ok
 
 
 class TestSuppressions:
