@@ -380,6 +380,89 @@ def bench_exec_corruption(reduced: bool, verbose: bool = True) -> dict:
     return row
 
 
+def _fleet_acquire_time(stats: dict, rt: ReapRuntime) -> float:
+    """One process's plan+exec *acquisition* cost: inspection (plan build
+    or digest-only when warm) + XLA compile time + store load time.
+    Execution is excluded — it is identical on both sides of the fleet
+    comparison."""
+    return (sum(st.get("inspect_s", 0.0) for st in stats.values())
+            + rt.exec.stats.compile_s + rt.store.stats.load_s
+            + rt.exec.stats.load_s)
+
+
+def _fleet_worker(shared_dir: str, reduced: bool) -> int:
+    """Child process of :func:`bench_fleet_warm`: one workload pass
+    against the shared content-addressed store; prints one
+    ``FLEET {json}`` line the parent parses."""
+    import hashlib
+    wl = _Workload(reduced)
+    rt = ReapRuntime(dataclasses.replace(
+        wl.BASE_CFG, shared_store_dir=shared_dir))
+    t0 = time.perf_counter()
+    stats = wl.run(rt)
+    wall = time.perf_counter() - t0
+    c, _ = rt.spgemm(wl.ga, wl.gb, method="gather")
+    cs = rt.cache_stats()
+    print("FLEET " + json.dumps(dict(
+        acquire_s=_fleet_acquire_time(stats, rt), wall_s=wall,
+        compiles=rt.exec.stats.compiles, exec_loads=rt.exec.stats.loads,
+        store_hits=cs["store_hits"], misses=cs["misses"],
+        digest=hashlib.sha256(np.ascontiguousarray(
+            np.asarray(c.data)).tobytes()).hexdigest())))
+    return 0
+
+
+def bench_fleet_warm(reduced: bool, verbose: bool = True) -> dict:
+    """Fleet warm start: two fresh interpreters, one ``--shared-store``.
+
+    Process 1 inspects, compiles and populates the content-addressed
+    store; process 2 must build NOTHING — zero inspections, zero XLA
+    compiles, every plan and executable loaded from process 1's writes —
+    and acquire them at least ``MIN_SPEEDUP``× faster than process 1
+    built them, with bit-for-bit identical results.  This is the gate for
+    the sharded-runtime PR's "many inspectors, one plan namespace" claim
+    (``bench.yml`` fleet step).
+    """
+    import subprocess
+    rows: List[dict] = []
+    with tempfile.TemporaryDirectory(prefix="fleet-bench-") as d:
+        for _ in range(2):
+            cmd = [sys.executable, "-m", "benchmarks.bench_plan_store",
+                   "--fleet-worker", "--shared-store", d]
+            if reduced:
+                cmd.append("--reduced")
+            p = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=900)
+            if p.returncode != 0:
+                raise RuntimeError(f"fleet worker failed:\n{p.stderr[-4000:]}")
+            line = [ln for ln in p.stdout.splitlines()
+                    if ln.startswith("FLEET ")][-1]
+            rows.append(json.loads(line[len("FLEET "):]))
+    a, b = rows
+    speedup = a["acquire_s"] / max(b["acquire_s"], 1e-9)
+    bitwise = a["digest"] == b["digest"]
+    row = dict(bench="fleet_warm_start",
+               first_acquire_s=a["acquire_s"],
+               second_acquire_s=b["acquire_s"], speedup=speedup,
+               second_compiles=int(b["compiles"]),
+               second_misses=int(b["misses"]),
+               second_exec_loads=int(b["exec_loads"]),
+               second_store_hits=int(b["store_hits"]),
+               bitwise_equal=bitwise, gate=True,
+               ok=bool(speedup >= MIN_SPEEDUP and b["compiles"] == 0
+                       and b["misses"] == 0 and b["exec_loads"] >= 1
+                       and b["store_hits"] >= 1 and bitwise))
+    if verbose:
+        print(f"plan_store,fleet_warm,"
+              f"first_acquire_ms={a['acquire_s'] * 1e3:.1f},"
+              f"second_acquire_ms={b['acquire_s'] * 1e3:.1f},"
+              f"speedup={speedup:.2f},second_compiles={b['compiles']},"
+              f"second_misses={b['misses']},bitwise={bitwise},"
+              f"{'PASS' if row['ok'] else 'FAIL'}"
+              f"(>={MIN_SPEEDUP}x, 0 compiles)")
+    return row
+
+
 def bench_store_io(reduced: bool, verbose: bool = True) -> dict:
     """Informational: manifest + payload sizes, gc behaviour under budget."""
     with tempfile.TemporaryDirectory() as d:
@@ -461,8 +544,25 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "process/machine")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write result rows to this JSON file")
+    ap.add_argument("--fleet-only", action="store_true",
+                    help="run only the fleet warm-start gate: two fresh "
+                         "processes over one --shared-store; the second "
+                         "must acquire every plan+executable from the "
+                         "first's writes with zero compiles")
+    ap.add_argument("--fleet-worker", action="store_true",
+                    help="internal: run one workload pass against "
+                         "--shared-store and print a FLEET result line")
     add_runtime_args(ap)    # --plan-store/--exec-store + shared knobs
     args = ap.parse_args(argv)
+    if args.fleet_worker:
+        return _fleet_worker(args.shared_store, args.reduced)
+    if args.fleet_only:
+        row = bench_fleet_warm(args.reduced)
+        if args.json:
+            Path(args.json).write_text(json.dumps(
+                dict(bench="plan_store_fleet", reduced=args.reduced,
+                     min_speedup=MIN_SPEEDUP, rows=[row]), indent=1))
+        return 0 if row["ok"] else 1
     rows = run(reduced=args.reduced, store_dir=args.plan_store,
                exec_dir=args.exec_store,
                expect_store_hits=args.expect_store_hits,

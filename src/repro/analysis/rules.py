@@ -23,8 +23,8 @@ REAP001  plan purity: inspector scope must not read value buffers
 REAP002  registry completeness: every non-router ``OpSpec`` declares the
          required hooks; ``plan_types`` entries are dataclasses the
          generic serializer can round-trip; the generic runtime modules
-         (``runtime/api.py``, ``runtime/plan_cache.py``,
-         ``runtime/plan_store.py``) contain no op-tag string branches;
+         (``runtime/{api,plan_cache,plan_store,exec_store,shard,
+         shared_store}.py``) contain no op-tag string branches;
          run-stats keys used in those modules (``RunStats(key=...)``
          kwargs, ``stats["key"] = ...`` writes) are declared in
          ``ops.RUNSTATS_FIELDS`` — ad-hoc keys silently vanish from the
@@ -61,7 +61,8 @@ STATIC_SHAPE_KWARGS = frozenset((
 META_OF_VALUE_ATTRS = ("dtype", "shape", "nbytes", "size", "ndim")
 # generic runtime modules that must stay op-agnostic (REAP002c)
 PROTECTED_TAG_MODULES = (
-    "runtime/api.py", "runtime/plan_cache.py", "runtime/plan_store.py")
+    "runtime/api.py", "runtime/plan_cache.py", "runtime/plan_store.py",
+    "runtime/exec_store.py", "runtime/shard.py", "runtime/shared_store.py")
 # variables that hold a per-run stats mapping (REAP002d: writes through
 # them must use declared RUNSTATS_FIELDS keys)
 STATS_NAME_RE = re.compile(r"(^|_)(stats?|st)(_|$)")

@@ -444,7 +444,8 @@ def choose_spgemm_path(a: CSR, b: CSR, block: int = 128,
 # token→expert assignment as a CSR) and the capacity enter the fingerprint —
 # tokens and gates are values.  A warm plan turns dispatch into two gathers.
 
-from repro.runtime.ops import OpSpec, register_op  # noqa: E402
+from repro.runtime.ops import (OpCapabilities, OpSpec,  # noqa: E402
+                               register_op)
 
 
 def _prepare_moe_dispatch(operands, cfg, *, n_experts: int, capacity=None,
@@ -479,12 +480,21 @@ def _exec_moe_dispatch(plan: MoeDispatchPlan, operands, cfg, *, overlap,
     return (x_bundles, plan), stats
 
 
+def _shard_moe_dispatch(cached, operands, cfg, *, mesh, routing, capacity,
+                        **kw):
+    from repro.runtime.shard import sharded_moe_dispatch
+    return sharded_moe_dispatch(np.asarray(operands[0]), routing, capacity,
+                                mesh, plan=cached)
+
+
 register_op(OpSpec(
     tag="moe_dispatch",
     prepare=_prepare_moe_dispatch,
     fingerprint=_fp_moe_dispatch,
     inspect=_inspect_moe_dispatch,
     execute_sync=_exec_moe_dispatch,
+    shard_plan=_shard_moe_dispatch,
     plan_types={"moe_dispatch": MoeDispatchPlan},
     allowed_kw=("n_experts", "capacity"),
+    capabilities=OpCapabilities(routing="in_graph", shardable=True),
 ))

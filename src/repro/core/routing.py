@@ -22,6 +22,35 @@ from __future__ import annotations
 import numpy as np
 
 
+def softmax_probs(logits, xp=np):
+    """Row softmax, max-shifted — the router's probability map.
+
+    One formula for both worlds (``xp.exp``/``sum`` method calls work on
+    numpy and jax arrays alike), so the host router and the traced router
+    cannot drift.
+    """
+    z = logits - logits.max(axis=-1, keepdims=True)
+    e = xp.exp(z)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def top_k_experts(probs, top_k: int, xp=np):
+    """Top-k expert selection + renormalized gates → (expert, gate).
+
+    The numpy branch uses a stable argsort on negated probs (ties break
+    toward the lower expert index — the same order ``jax.lax.top_k``
+    produces), the jax branch ``lax.top_k``; both feed one
+    ``normalize_gates``.
+    """
+    if xp is np:
+        expert = np.argsort(-probs, axis=-1, kind="stable")[..., :top_k]
+        gate = np.take_along_axis(probs, expert, axis=-1)
+    else:
+        import jax
+        gate, expert = jax.lax.top_k(probs, top_k)
+    return expert, normalize_gates(gate, xp=xp)
+
+
 def expert_assignment(e_flat, capacity: int, n_experts: int, xp=np):
     """Capacity-limited bundle-slot assignment for flat expert choices.
 

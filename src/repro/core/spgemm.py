@@ -86,6 +86,22 @@ def spgemm_gather_execute(plan: SpGemmGatherPlan, a_data: np.ndarray,
         jnp.asarray(plan.out_idx), c_nnz=plan.c_nnz))
 
 
+def _gather_math(a_data, b_data, a_idx, b_idx, out_idx, c_cap: int):
+    """Capped gather→multiply→merge math, shared by the chunked executor
+    and the sharded (shard_map) executor in ``runtime/shard.py`` — one
+    definition keeps the two paths bit-for-bit interchangeable.
+
+    Dead (padding) gathers must index the appended zero slot
+    (``len(a_data)`` / ``len(b_data)``) and dead outputs the ``c_cap``
+    segment, which is dropped by the trailing slice.
+    """
+    a_data = jnp.concatenate([a_data, jnp.zeros(1, a_data.dtype)])
+    b_data = jnp.concatenate([b_data, jnp.zeros(1, b_data.dtype)])
+    pp = a_data[a_idx] * b_data[b_idx]
+    return jax.ops.segment_sum(pp, out_idx, num_segments=c_cap + 1,
+                               indices_are_sorted=True)[:c_cap]
+
+
 @persistent_jit(static_argnames=("c_cap",))
 def _gather_execute_capped(a_data, b_data, a_idx, b_idx, out_idx, c_cap: int):
     """Shape-bucketed gather executor for the chunked/overlapped runtime.
@@ -94,11 +110,7 @@ def _gather_execute_capped(a_data, b_data, a_idx, b_idx, out_idx, c_cap: int):
     are padded to power-of-two tile counts, so streaming many differently
     sized chunks triggers only O(log) recompilations.
     """
-    a_data = jnp.concatenate([a_data, jnp.zeros(1, a_data.dtype)])
-    b_data = jnp.concatenate([b_data, jnp.zeros(1, b_data.dtype)])
-    pp = a_data[a_idx] * b_data[b_idx]
-    return jax.ops.segment_sum(pp, out_idx, num_segments=c_cap + 1,
-                               indices_are_sorted=True)[:c_cap]
+    return _gather_math(a_data, b_data, a_idx, b_idx, out_idx, c_cap)
 
 
 def spgemm_gather_execute_chunk(plan: SpGemmGatherPlan, a_data: np.ndarray,
@@ -257,7 +269,8 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", block: int = 128,
 # runtime has always used, so persisted stores stay warm across this
 # refactor.
 
-from repro.runtime.ops import OpSpec, register_op  # noqa: E402
+from repro.runtime.ops import (OpCapabilities, OpSpec,  # noqa: E402
+                               register_op)
 
 
 def _spgemm_digests(a: CSR, b: CSR, digests):
@@ -314,6 +327,12 @@ def _exec_spgemm_gather_chunked(cached, operands, cfg, *, overlap, **kw):
     return c, stats, chunkset
 
 
+def _shard_spgemm_gather(cached, operands, cfg, *, mesh, **kw):
+    from repro.runtime.shard import sharded_spgemm_gather
+    a, b = operands
+    return sharded_spgemm_gather(a, b, mesh, tile=cfg.tile, plan=cached)
+
+
 def _fp_spgemm_block(operands, cfg, *, chunked, digests=None, **kw):
     a, b = operands
     digests = _spgemm_digests(a, b, digests)
@@ -353,9 +372,11 @@ register_op(OpSpec(
     inspect=_inspect_spgemm_gather,
     execute_sync=_exec_spgemm_gather,
     execute_chunked=_exec_spgemm_gather_chunked,
+    shard_plan=_shard_spgemm_gather,
     plan_types={"spgemm_gather": SpGemmGatherPlan},
     fingerprint_ops=("spgemm_gather", "spgemm_gather_chunked"),
     allowed_kw=("digests",),
+    capabilities=OpCapabilities(shardable=True),
 ))
 
 register_op(OpSpec(

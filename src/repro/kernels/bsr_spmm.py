@@ -228,14 +228,21 @@ def inspect_spmm(w: CSR, block: int = 128,
                     is_first, is_last, int(kk.shape[0]), fingerprint)
 
 
-@persistent_jit(static_argnames=("n_j",))
-def _spmm_execute_jnp(x_tiles, w_tiles, w_id, k_blk, j_blk, n_j: int):
-    """jnp fallback executor: per-job tile dots + segment-sum over output
-    block-columns (jobs are sorted by ``j_blk``)."""
+def _spmm_math(x_tiles, w_tiles, w_id, k_blk, j_blk, n_j: int):
+    """Per-job tile dots + segment-sum over output block-columns (jobs are
+    sorted by ``j_blk``).  Shared by the jnp fallback executor and the
+    sharded (shard_map) executor in ``runtime/shard.py`` — one definition
+    keeps the two paths bit-for-bit interchangeable."""
     prods = jnp.einsum("tij,tjk->tik", x_tiles[k_blk], w_tiles[w_id],
                        preferred_element_type=x_tiles.dtype)
     return jax.ops.segment_sum(prods, j_blk, num_segments=n_j,
                                indices_are_sorted=True)
+
+
+@persistent_jit(static_argnames=("n_j",))
+def _spmm_execute_jnp(x_tiles, w_tiles, w_id, k_blk, j_blk, n_j: int):
+    """jnp fallback executor (see ``_spmm_math``)."""
+    return _spmm_math(x_tiles, w_tiles, w_id, k_blk, j_blk, n_j)
 
 
 def spmm_execute(plan: SpmmPlan, x: np.ndarray, w_data: np.ndarray,
@@ -322,13 +329,20 @@ def _exec_spmm(plan, operands, cfg, *, overlap, dtype=np.float32, **kw):
     return y, stats
 
 
+def _shard_spmm(cached, operands, cfg, *, mesh, dtype=np.float32, **kw):
+    from repro.runtime.shard import sharded_spmm
+    x, w = operands
+    return sharded_spmm(x, w, mesh, cfg.block, plan=cached, dtype=dtype)
+
+
 register_op(OpSpec(
     tag="spmm",
     fingerprint=_fp_spmm,
     inspect=_inspect_spmm,
     execute_sync=_exec_spmm,
+    shard_plan=_shard_spmm,
     plan_types={"spmm": SpmmPlan, "bsr_pattern": BsrPattern},
     allowed_kw=("dtype",),
     capabilities=OpCapabilities(dtypes=("float32", "float64"),
-                                routing="host"),
+                                routing="host", shardable=True),
 ))

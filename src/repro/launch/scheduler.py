@@ -184,6 +184,36 @@ class ServeScheduler:
         self._ttft_s: List[float] = []
         self._decode_step_s: List[float] = []
 
+    # -- prewarm ------------------------------------------------------------
+
+    def prefill_buckets(self, prompt_lens) -> List[int]:
+        """Distinct padded prefill lengths the given prompts will run at —
+        i.e. the set of prefill programs the serve will need.  Bucketing
+        mirrors ``_prefill_into`` exactly: powers of two for pure-attention
+        SwiGLU decoders, exact lengths otherwise."""
+        if _bucketed_prefill_ok(self.cfg):
+            return sorted({_bucket_len(int(n)) for n in prompt_lens})
+        return sorted({int(n) for n in prompt_lens})
+
+    def prewarm(self, prompt_lens) -> int:
+        """Compile (or load from the executable store) the prefill program
+        for every prompt-length bucket before the first request arrives.
+
+        Each distinct padded length is a distinct XLA program; running each
+        once against a throwaway row cache moves every prefill compile out
+        of the serving window — and, because ``_prefill`` is a
+        ``persistent_jit``, persists each bucket's executable so a restarted
+        server loads all of them with zero compiles.  Returns the number of
+        buckets warmed.  Scheduler state (cache, slots, queue, stats,
+        latency observations) is untouched.
+        """
+        buckets = self.prefill_buckets(prompt_lens)
+        for n_pad in buckets:
+            row_cache = M.init_cache(self.cfg, 1, self.max_seq)
+            self._prefill(self.params, jnp.zeros((1, n_pad), jnp.int32),
+                          row_cache)
+        return len(buckets)
+
     # -- accounting ---------------------------------------------------------
 
     def tokens_resident(self) -> int:

@@ -127,9 +127,32 @@ def _capability_report() -> str:
             continue
         cap = capability_summary(spec)
         chunk = "+chunked" if cap["chunked"] else ""
+        shard = "+shardable" if cap["shardable"] else ""
         lines.append(f"  {tag}: [{','.join(cap['dtypes'])}] "
-                     f"{cap['routing']}{chunk}")
+                     f"{cap['routing']}{chunk}{shard}")
     return "\n".join(lines)
+
+
+def _resolve_routing(mode: str) -> dict:
+    """Per-op serving route, decided from declared ``OpCapabilities``.
+
+    ``auto`` takes each concrete op's own ``routing`` declaration — an op
+    that declares ``in_graph`` has a traced twin and stays inside the
+    compiled step; one that declares ``host`` runs through the eager
+    registry path.  ``host``/``in_graph`` force every concrete op one way
+    (the override the capability system exists to make safe: capabilities
+    say which ops *can* take it).  Routers are skipped — they own no
+    execution path.
+    """
+    from repro.runtime.ops import capability_summary, get_op, list_ops
+    routes = {}
+    for tag in list_ops():
+        spec = get_op(tag)
+        if spec.route is not None:
+            continue
+        declared = capability_summary(spec)["routing"]
+        routes[tag] = declared if mode == "auto" else mode
+    return routes
 
 
 def serve_continuous(cfg, args, rt):
@@ -146,6 +169,13 @@ def serve_continuous(cfg, args, rt):
     sch = ServeScheduler(cfg, params, max_batch=args.max_batch,
                          max_seq=args.max_seq,
                          token_budget=args.token_budget, on_token=on_token)
+    if args.prewarm:
+        t0 = time.time()
+        n = sch.prewarm([len(r.prompt) for r in trace])
+        print(f"[serve] prewarmed {n} prefill bucket(s) in "
+              f"{time.time() - t0:.2f}s"
+              + (" (persisted to the exec store)"
+                 if rt is not None and rt.exec is not None else ""))
     t0 = time.time()
     completions = sch.run(trace)
     total = time.time() - t0
@@ -214,13 +244,31 @@ def main(argv=None):
                          "jax.pure_callback — decode stays jitted; only "
                          "the routing pattern leaves the graph. Repeated "
                          "per-token routings hit warm bundling plans; with "
-                         "--plan-store they survive restarts")
+                         "--plan-store they survive restarts. Legacy alias "
+                         "for --routing=host")
+    ap.add_argument("--routing", choices=("auto", "host", "in_graph"),
+                    default="auto",
+                    help="per-op dispatch route: 'auto' follows each "
+                         "registered op's declared OpCapabilities.routing "
+                         "(in_graph ops stay inside the compiled step, "
+                         "host ops go through the eager registry path); "
+                         "'host'/'in_graph' force every op one way")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="[--continuous] compile (or load from the exec "
+                         "store) the prefill program for every prompt-"
+                         "length bucket in the trace before serving — all "
+                         "prefill compiles leave the serving window, and "
+                         "with --exec-store every bucket's executable is "
+                         "persisted for warm restarts")
     from repro.runtime import add_runtime_args
     add_runtime_args(ap)
     args = ap.parse_args(argv)
+    if args.host_moe and args.routing == "auto":
+        args.routing = "host"            # legacy alias keeps its meaning
 
     rt = None
-    if args.plan_store or args.exec_store or args.host_moe:
+    if (args.plan_store or args.exec_store or args.host_moe
+            or args.routing == "host"):
         from repro.runtime import (ReapRuntime, RuntimeConfig,
                                    set_default_runtime)
         rt = set_default_runtime(
@@ -241,12 +289,24 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_config(cfg)
-    host_moe = args.host_moe
+    # route selection ACTS on declared capabilities: moe_dispatch is the op
+    # the decode step can route host-side, so its resolved route decides
+    # whether the host dispatch runtime gets installed
+    routes = _resolve_routing(args.routing)
+    host_moe = routes.get("moe_dispatch") == "host"
     if host_moe and cfg.ffn != "moe":
         # no MoE layers → nothing to route through the runtime
-        print(f"[serve] note: --host-moe has no effect on {args.arch} "
-              "(no MoE layers)")
+        if args.host_moe or args.routing == "host":
+            print(f"[serve] note: host routing has no effect on {args.arch}"
+                  " (no MoE layers)")
         host_moe = False
+    if host_moe and rt is None:
+        from repro.runtime import (ReapRuntime, RuntimeConfig,
+                                   set_default_runtime)
+        rt = set_default_runtime(ReapRuntime(RuntimeConfig.from_args(args)))
+    if rt is not None:
+        print(f"[serve] routing ({args.routing}): " + " ".join(
+            f"{tag}={route}" for tag, route in sorted(routes.items())))
     if host_moe:
         # decode stays fully jitted (scan_layers included): the MoE decode
         # branch hops to the host through pure_callback for dest only

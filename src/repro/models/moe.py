@@ -21,8 +21,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core.routing import (expert_assignment, normalize_gates,
-                            scatter_to_slots)
+from ..core.routing import (expert_assignment, scatter_to_slots,
+                            softmax_probs, top_k_experts)
 from .layers import dense
 
 
@@ -35,16 +35,15 @@ def host_route(tokens, router_w, *, top_k: int
     ``expert_ids`` to ``runtime.ReapRuntime.moe_dispatch`` (op tag
     ``moe_dispatch``) and repeated routings hit a warm ``MoeDispatchPlan``;
     ``gates`` are values and go to ``plan.combine`` after the expert GEMM.
+
+    All routing math lives in ``core.routing`` (softmax, top-k, gate
+    renorm) — the traced path consumes the same helpers with ``xp=jnp``,
+    so the two routers agree by construction.
     """
     tokens = np.asarray(tokens, np.float32)
     w = np.asarray(router_w, np.float32)
-    logits = tokens @ w
-    z = logits - logits.max(axis=-1, keepdims=True)
-    probs = np.exp(z)
-    probs /= probs.sum(axis=-1, keepdims=True)
-    expert = np.argsort(-probs, axis=-1, kind="stable")[:, :top_k]
-    gate = np.take_along_axis(probs, expert, axis=-1)
-    gate = normalize_gates(gate, xp=np)
+    probs = softmax_probs(tokens @ w, xp=np)
+    expert, gate = top_k_experts(probs, top_k, xp=np)
     return expert.astype(np.int64), gate.astype(np.float32)
 
 
@@ -166,9 +165,8 @@ def route_and_bundle(tokens, router_w, *, n_experts: int, top_k: int,
     """
     t, d = tokens.shape
     logits = dense(tokens.astype(jnp.float32), router_w.astype(jnp.float32))
-    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
-    gate, expert = jax.lax.top_k(probs, top_k)               # (T, K)
-    gate = normalize_gates(gate, xp=jnp)
+    probs = softmax_probs(logits, xp=jnp)                    # (T, E)
+    expert, gate = top_k_experts(probs, top_k, xp=jnp)       # (T, K)
 
     # capacity assignment: shared with the host inspector (core.routing)
     e_flat = expert.reshape(-1)                              # (T*K,)
@@ -232,9 +230,8 @@ def _row_dispatch(tokens, router_w, *, n_experts, top_k, capacity,
     """
     t, d = tokens.shape
     logits = dense(tokens.astype(jnp.float32), router_w.astype(jnp.float32))
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate, expert = jax.lax.top_k(probs, top_k)
-    gate = normalize_gates(gate, xp=jnp)
+    probs = softmax_probs(logits, xp=jnp)
+    expert, gate = top_k_experts(probs, top_k, xp=jnp)
 
     # capacity assignment: shared with the host inspector (core.routing)
     e_flat = expert.reshape(-1)

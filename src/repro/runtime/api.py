@@ -53,6 +53,17 @@ class RuntimeConfig:
     programs memory → disk → XLA, so a restarted process skips compilation
     — not just inspection — for every recurring launch-shape bucket.
 
+    ``shared_store_dir`` attaches *both* stores at once, backed by one
+    content-addressed blob area (shared_store.SharedBlobs): every process
+    pointed at the same directory shares one plan + executable namespace,
+    so a fleet warms collectively — one process inspects/compiles, the
+    rest load.  Explicit ``store_dir``/``exec_store_dir`` win over the
+    shared layout for that store.
+
+    ``mesh_shape`` declares the default device mesh for shardable ops:
+    ``run()`` routes them through their ``shard_plan`` hook over that
+    mesh (an explicit ``mesh=`` argument wins).
+
     This dataclass is the single source of truth for runtime
     construction.  Entry points build it with ``RuntimeConfig.from_args``
     over a parser extended by ``add_runtime_args``; programmatic callers
@@ -70,6 +81,8 @@ class RuntimeConfig:
     store_budget_bytes: int = 1 << 30
     exec_store_dir: Optional[str] = None
     exec_budget_bytes: int = 1 << 30
+    shared_store_dir: Optional[str] = None
+    mesh_shape: Optional[Tuple[int, ...]] = None
 
     @classmethod
     def from_args(cls, args: Any, **overrides) -> "RuntimeConfig":
@@ -95,6 +108,12 @@ class RuntimeConfig:
         exec_mb = getattr(args, "exec_store_budget_mb", None)
         if exec_mb is not None:
             kw["exec_budget_bytes"] = int(exec_mb * 1e6)
+        shared_dir = getattr(args, "shared_store", None)
+        if shared_dir is not None:
+            kw["shared_store_dir"] = shared_dir
+        mesh_shape = getattr(args, "mesh_shape", None)
+        if mesh_shape is not None:
+            kw["mesh_shape"] = parse_mesh_shape(mesh_shape)
         entries = getattr(args, "cache_entries", None)
         if entries is not None:
             kw["cache_entries"] = entries
@@ -107,6 +126,22 @@ class RuntimeConfig:
             kw["use_pallas"] = False
         kw.update(overrides)
         return cls(**kw)
+
+
+def parse_mesh_shape(text: Any) -> Optional[Tuple[int, ...]]:
+    """``"8"`` → ``(8,)``; ``"2x4"`` → ``(2, 4)``; tuples pass through;
+    ``None`` stays ``None`` (no mesh configured)."""
+    if text is None:
+        return None
+    if isinstance(text, (tuple, list)):
+        return tuple(int(n) for n in text)
+    parts = [p for p in str(text).lower().replace(",", "x").split("x") if p]
+    if not parts:
+        raise ValueError(f"empty mesh shape {text!r}")
+    shape = tuple(int(p) for p in parts)
+    if any(n < 1 for n in shape):
+        raise ValueError(f"mesh shape must be positive, got {shape}")
+    return shape
 
 
 def add_runtime_args(parser) -> None:
@@ -129,6 +164,14 @@ def add_runtime_args(parser) -> None:
                         "recurring launch-shape buckets")
     g.add_argument("--exec-store-budget-mb", type=float, default=None,
                    metavar="MB", help="exec-store disk LRU budget")
+    g.add_argument("--shared-store", metavar="DIR", default=None,
+                   help="fleet store: plan + executable stores under DIR "
+                        "backed by one content-addressed blob area; every "
+                        "process pointed here shares one warm namespace")
+    g.add_argument("--mesh-shape", metavar="N[xM]", default=None,
+                   help="device mesh for shardable ops, e.g. 8 or 2x4; "
+                        "ops with a shard_plan hook execute via shard_map "
+                        "over this mesh")
     g.add_argument("--cache-entries", type=int, default=None,
                    help="in-memory plan cache capacity")
     g.add_argument("--n-chunks", type=int, default=None,
@@ -228,15 +271,30 @@ class ReapRuntime:
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
         self.config = cfg
+        self.shared = None
+        if cfg.shared_store_dir is not None:
+            from .shared_store import SharedBlobs
+            self.shared = SharedBlobs(cfg.shared_store_dir)
         self.store = None
-        if cfg.store_dir is not None:
+        if cfg.store_dir is not None:        # explicit dir wins: local store
             from .plan_store import PlanStore
             self.store = PlanStore(cfg.store_dir, cfg.store_budget_bytes)
+        elif self.shared is not None:
+            from .plan_store import PlanStore
+            self.store = PlanStore(self.shared.store_root("plans"),
+                                   cfg.store_budget_bytes,
+                                   shared=self.shared)
         self.exec = None
         if cfg.exec_store_dir is not None:
             from .exec_store import ExecCache, ExecStore
             self.exec = ExecCache(
                 ExecStore(cfg.exec_store_dir, cfg.exec_budget_bytes))
+        elif self.shared is not None:
+            from .exec_store import ExecCache, ExecStore
+            self.exec = ExecCache(
+                ExecStore(self.shared.store_root("exec"),
+                          cfg.exec_budget_bytes, shared=self.shared))
+        self._mesh = None                    # built lazily from mesh_shape
         self.cache = PlanCache(cfg.cache_entries, store=self.store)
         # routing decisions are tiny strings; keep them out of the plan
         # cache (and off the store) so they neither consume plan capacity
@@ -270,9 +328,28 @@ class ReapRuntime:
         with use_exec_cache(self.exec):
             yield lambda: self.exec.stats.compiles == before
 
+    def _default_mesh(self):
+        """Mesh declared by ``config.mesh_shape`` (built once, lazily) —
+        None when the runtime is single-host."""
+        if self.config.mesh_shape is None:
+            return None
+        if self._mesh is None:
+            from ..launch.mesh import make_mesh
+            shape = tuple(self.config.mesh_shape)
+            if len(shape) == 1:
+                axes = ("data",)
+            elif len(shape) == 2:
+                axes = ("pod", "data")
+            else:
+                raise ValueError(
+                    f"mesh_shape supports 1 or 2 axes, got {shape}")
+            self._mesh = make_mesh(shape, axes)
+        return self._mesh
+
     # -- Generic dispatch --------------------------------------------------
 
     def run(self, op_tag: str, *operands, overlap: Optional[bool] = None,
+            mesh: Optional[object] = None,
             **kw) -> Tuple[object, "RunStats"]:
         """Execute a registered planned op through the cache/pipeline.
 
@@ -283,6 +360,11 @@ class ReapRuntime:
         ≈ digest cost when warm); with an exec store configured,
         ``exec_cache_hit`` reports whether execution needed zero new XLA
         compilations.
+
+        ``mesh`` (or ``config.mesh_shape``) routes ops that registered a
+        ``shard_plan`` hook through sharded execution; the hook owns the
+        partitioning and must produce bit-identical results to the
+        single-host path.  Non-shardable ops ignore the mesh.
         """
         spec = _ops.get_op(op_tag)
         hops = 0
@@ -301,14 +383,38 @@ class ReapRuntime:
                     f"op {op_tag!r} got unexpected keyword arguments "
                     f"{sorted(unknown)}; accepts {sorted(spec.allowed_kw)}")
         overlap = cfg.overlap if overlap is None else overlap
-        chunked = spec.execute_chunked is not None and cfg.n_chunks > 1
+        mesh = mesh if mesh is not None else self._default_mesh()
+        sharded = (mesh is not None and spec.shard_plan is not None
+                   and spec.capabilities.shardable)
+        chunked = (not sharded and spec.execute_chunked is not None
+                   and cfg.n_chunks > 1)
         if spec.prepare is not None:    # derive once what fingerprint +
             kw = spec.prepare(operands, cfg, **kw)   # inspect both need
         fp = spec.fingerprint(operands, cfg, chunked=chunked, **kw)
+        if sharded:
+            # namespace sharded plans by mesh extent: the shard_plan
+            # artifact partitions rows for exactly this many shards, so a
+            # different mesh must miss and re-partition
+            from ..parallel.sharding import axis_size, dp_axes
+            n_shards = axis_size(mesh, dp_axes(mesh))
+            fp = dataclasses.replace(
+                fp, params=tuple(fp.params) + (("shards", n_shards),))
 
         inspect_s: Optional[float] = None
         with self._exec_scope() as exec_probe:
-            if chunked:
+            if sharded:
+                cached, source = self.cache.get_with_source(fp)
+                self._record_op(op_tag, source)
+                result, op_stats, artifact = spec.shard_plan(
+                    cached, operands, cfg, mesh=mesh, **kw)
+                if cached is None and artifact is not None:
+                    try:
+                        artifact.fingerprint = fp
+                    except (AttributeError, TypeError):
+                        pass    # custom artifacts need not carry a slot
+                    self.cache.put(fp, artifact)
+                hit = cached is not None
+            elif chunked:
                 cached, source = self.cache.get_with_source(fp)
                 self._record_op(op_tag, source)
                 result, op_stats, artifact = spec.execute_chunked(

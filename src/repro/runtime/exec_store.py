@@ -58,22 +58,16 @@ import contextlib
 import contextvars
 import dataclasses
 import hashlib
-import os
 import pickle
 import threading
 import time
-from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
-try:
-    import fcntl
-except ImportError:                      # non-POSIX: lockless best-effort
-    fcntl = None
+from .shared_store import (LOCKFILE, MANIFEST,  # noqa: F401  (re-exported
+                           SCHEMA_VERSION, SharedBlobs,  # store contract)
+                           StoreBase, fcntl)
 
-SCHEMA_VERSION = 1
-MANIFEST = "manifest.json"
 EXE_DIR = "exe"
-LOCKFILE = "manifest.lock"
 
 #: StableHLO custom-call markers whose presence makes an executable
 #: process-bound (host callback pointers die with the process)
@@ -145,120 +139,31 @@ class ExecStoreStats:
     load_s: float = 0.0  # seconds spent in successful loads
 
 
-class ExecStore:
+class ExecStore(StoreBase):
     """Disk store of serialized compiled executables, keyed by exec key.
 
     Thread-safe within a process; across processes the manifest takes the
     same advisory ``manifest.lock`` + merge-on-write protocol as the plan
-    store, and payloads are content-addressed and atomically replaced.
-    ``byte_budget=None`` disables the disk LRU.
+    store (both inherit it from ``shared_store.StoreBase``), and payloads
+    are content-addressed and atomically replaced.  ``byte_budget=None``
+    disables the disk LRU.  ``shared`` (a ``SharedBlobs``) switches
+    payloads to the fleet-shared content-addressed layout so a fleet of
+    processes compiles each executable once.
     """
 
-    #: seconds to wait for the cross-process manifest lock before falling
-    #: through to an unmerged (in-memory-view) write
-    lock_timeout: float = 2.0
+    payload_dir_name = EXE_DIR
+    payload_suffix = ".bin"
 
-    def __init__(self, root, byte_budget: Optional[int] = 1 << 30):
-        self.root = Path(root)
-        self.byte_budget = byte_budget
-        self.stats = ExecStoreStats()
+    def __init__(self, root, byte_budget: Optional[int] = 1 << 30,
+                 shared: Optional[SharedBlobs] = None):
+        super().__init__(root, byte_budget, ExecStoreStats(), shared=shared)
         self.env = environment()
-        self._entries: Optional[Dict[str, dict]] = None   # lazy manifest
-        self._lock = threading.Lock()
-
-    # -- locking (flock OUTER, self._lock inner — same order everywhere) --
-
-    @contextlib.contextmanager
-    def _manifest_flock(self, timeout: Optional[float] = None):
-        if fcntl is None:
-            yield False
-            return
-        timeout = self.lock_timeout if timeout is None else timeout
-        try:
-            self.root.mkdir(parents=True, exist_ok=True)
-            fh = open(self.root / LOCKFILE, "a+")
-        except OSError:
-            yield False
-            return
-        got = False
-        deadline = time.monotonic() + timeout
-        try:
-            while True:
-                try:
-                    fcntl.flock(fh, fcntl.LOCK_EX | fcntl.LOCK_NB)
-                    got = True
-                    break
-                except OSError:
-                    if time.monotonic() >= deadline:
-                        break
-                    time.sleep(0.02)
-            yield got
-        finally:
-            if got:
-                try:
-                    fcntl.flock(fh, fcntl.LOCK_UN)
-                except OSError:
-                    pass
-            fh.close()
-
-    # -- manifest ----------------------------------------------------------
 
     @property
-    def _exe(self) -> Path:
-        return self.root / EXE_DIR
-
-    def _manifest_path(self) -> Path:
-        return self.root / MANIFEST
-
-    def _load_manifest_locked(self) -> Dict[str, dict]:
-        if self._entries is not None:
-            return self._entries
-        path = self._manifest_path()
-        entries: Dict[str, dict] = {}
-        try:
-            import json
-            data = json.loads(path.read_text())
-            if data.get("schema") != SCHEMA_VERSION:
-                raise ValueError(f"manifest schema {data.get('schema')!r} "
-                                 f"!= {SCHEMA_VERSION}")
-            entries = dict(data["entries"])
-        except FileNotFoundError:
-            pass
-        except Exception:
-            # corrupt json / wrong schema: move aside, restart empty —
-            # never crash a running job over stale cache state
-            self.stats.corrupt += 1
-            try:
-                path.replace(path.with_suffix(".corrupt"))
-            except OSError:
-                pass
-        self._entries = entries
-        return entries
-
-    def _write_manifest_locked(self) -> None:
-        import json
-        self.root.mkdir(parents=True, exist_ok=True)
-        payload = json.dumps({"schema": SCHEMA_VERSION,
-                              "entries": self._entries or {}},
-                             sort_keys=True, indent=1)
-        tmp = self._manifest_path().with_name(
-            f".{MANIFEST}.tmp-{os.getpid()}")
-        tmp.write_text(payload)
-        os.replace(tmp, self._manifest_path())
-
-    def _drop_locked(self, key: str) -> None:
-        ent = (self._entries or {}).pop(key, None)
-        if ent is not None:
-            try:
-                (self._exe / ent["payload"]).unlink()
-            except OSError:
-                pass
+    def _exe(self):
+        return self._payload_dir
 
     # -- core API ----------------------------------------------------------
-
-    def __len__(self) -> int:
-        with self._lock:
-            return len(self._load_manifest_locked())
 
     def get(self, key: str):
         """Load + deserialize the executable persisted under ``key``.
@@ -276,7 +181,7 @@ class ExecStore:
             if ent.get("env") != self.env:
                 self.stats.env_miss += 1
                 return None
-            path = self._exe / ent["payload"]
+            path = self._payload_path(ent)
         try:
             blob = path.read_bytes()
             if hashlib.sha256(blob).hexdigest() != ent["sha256"]:
@@ -286,6 +191,7 @@ class ExecStore:
             loaded = _se.deserialize_and_load(payload, in_tree, out_tree)
         except Exception:
             self.stats.corrupt += 1
+            self._discard_corrupt_payload(ent)
             with self._manifest_flock() as locked:
                 with self._lock:
                     if locked:
@@ -317,19 +223,18 @@ class ExecStore:
         try:
             from jax.experimental import serialize_executable as _se
             blob = pickle.dumps(_se.serialize(compiled))
+            sha = hashlib.sha256(blob).hexdigest()
             with self._manifest_flock() as locked:
                 with self._lock:
                     if locked:
                         self._entries = None    # merge-write freshest view
                     entries = self._load_manifest_locked()
-                    self._exe.mkdir(parents=True, exist_ok=True)
-                    tmp = self._exe / f".{key}.bin.tmp-{os.getpid()}"
-                    tmp.write_bytes(blob)
-                    os.replace(tmp, self._exe / f"{key}.bin")
+                    payload_ref = self._persist_payload_locked(key, blob,
+                                                               sha)
                     now = time.time()
                     entries[key] = {
-                        "payload": f"{key}.bin",
-                        "sha256": hashlib.sha256(blob).hexdigest(),
+                        "payload": payload_ref,
+                        "sha256": sha,
                         "bytes": len(blob),
                         "env": dict(self.env),
                         "label": label,
@@ -345,49 +250,6 @@ class ExecStore:
 
     # -- maintenance -------------------------------------------------------
 
-    def _gc_locked(self, byte_budget: Optional[int],
-                   sweep: bool = False) -> List[str]:
-        entries = self._load_manifest_locked()
-        evicted: List[str] = []
-        if byte_budget is not None:
-            total = sum(int(e["bytes"]) for e in entries.values())
-            for key, _ in sorted(entries.items(),
-                                 key=lambda kv: kv[1]["last_used"]):
-                if total <= byte_budget:
-                    break
-                total -= int(entries[key]["bytes"])
-                self._drop_locked(key)
-                evicted.append(key)
-        # orphan sweep only from explicit maintenance — a put-time sweep
-        # against a stale manifest view would delete concurrent writers'
-        # payloads and in-flight temp files
-        if sweep and self._exe.is_dir():
-            owned = {e["payload"] for e in entries.values()}
-            now = time.time()
-            for f in self._exe.iterdir():
-                if f.name in owned:
-                    continue
-                try:
-                    if f.name.startswith(".") and \
-                            now - f.stat().st_mtime < 3600:
-                        continue
-                    f.unlink()
-                except OSError:
-                    pass
-        self.stats.evicted += len(evicted)
-        return evicted
-
-    def gc(self, byte_budget: Optional[int] = None) -> List[str]:
-        """Evict LRU entries beyond the byte budget; sweep orphan files."""
-        with self._manifest_flock():
-            with self._lock:
-                self._entries = None    # maintenance acts on freshest view
-                evicted = self._gc_locked(
-                    self.byte_budget if byte_budget is None
-                    else byte_budget, sweep=True)
-                self._write_manifest_locked()
-        return evicted
-
     def verify(self, prune: bool = False) -> dict:
         """Check every payload's sha256 + deserializability + environment.
 
@@ -400,7 +262,7 @@ class ExecStore:
         ok, corrupt, stale = [], [], []
         for key, ent in entries.items():
             try:
-                blob = (self._exe / ent["payload"]).read_bytes()
+                blob = self._payload_path(ent).read_bytes()
                 if hashlib.sha256(blob).hexdigest() != ent["sha256"]:
                     raise ValueError("digest mismatch")
             except Exception:
@@ -410,10 +272,7 @@ class ExecStore:
                 stale.append(key)
             else:
                 ok.append(key)
-        owned = {e["payload"] for e in entries.values()}
-        orphans = ([f.name for f in self._exe.iterdir()
-                    if f.name not in owned]
-                   if self._exe.is_dir() else [])
+        orphans = self._orphans(entries)
         if prune and (corrupt or stale or orphans):
             with self._manifest_flock():
                 with self._lock:
@@ -424,16 +283,6 @@ class ExecStore:
             self.stats.corrupt += len(corrupt)
         return {"ok": ok, "corrupt": corrupt, "stale_env": stale,
                 "orphans": orphans}
-
-    def clear(self) -> None:
-        with self._manifest_flock():
-            with self._lock:
-                self._entries = None
-                self._load_manifest_locked()
-                for key in list(self._entries or {}):
-                    self._drop_locked(key)
-                self._gc_locked(0, sweep=True)
-                self._write_manifest_locked()
 
     def summary(self) -> dict:
         with self._lock:

@@ -43,7 +43,8 @@ __all__ = [
 # file path, so ops.py must keep importing nothing beyond the stdlib.
 REQUIRED_HOOKS: Tuple[str, ...] = ("fingerprint", "inspect", "execute_sync")
 ROUTER_HOOK: str = "route"
-EXECUTOR_HOOKS: Tuple[str, ...] = ("execute_sync", "execute_chunked")
+EXECUTOR_HOOKS: Tuple[str, ...] = ("execute_sync", "execute_chunked",
+                                   "shard_plan")
 INSPECTOR_HOOKS: Tuple[str, ...] = ("fingerprint", "inspect", "prepare")
 SERIALIZER_HOOKS: Tuple[str, ...] = ("serialize", "deserialize")
 # operand attributes that carry *values* — off-limits to inspector hooks —
@@ -82,6 +83,13 @@ class OpCapabilities:
         One of :data:`CAPABILITY_ROUTINGS` — whether dispatch decisions
         run on the host only or the op also has an in-graph variant.
 
+    ``shardable``
+        The op can execute across a device mesh through its
+        ``shard_plan`` hook (``ReapRuntime.run(..., mesh=...)`` consults
+        this).  ``OpSpec.__post_init__`` enforces that the declaration
+        and the hook agree, so the flag cannot drift from the hook
+        actually registered.
+
     Chunked-executor availability is deliberately *derived*, never
     declared: ``spec.execute_chunked is not None`` is the ground truth
     and :func:`capability_summary` reports it, so the metadata cannot
@@ -90,6 +98,7 @@ class OpCapabilities:
 
     dtypes: Tuple[str, ...] = ("float32",)
     routing: str = "host"
+    shardable: bool = False
 
     def __post_init__(self):
         if self.routing not in CAPABILITY_ROUTINGS:
@@ -103,12 +112,14 @@ class OpCapabilities:
 def capability_summary(spec: "OpSpec") -> Dict[str, object]:
     """Flat capability dict for one spec (the reporting contract).
 
-    ``{"dtypes": (...), "routing": "host"|"in_graph", "chunked": bool}``;
-    routers report their own declared metadata with ``chunked=False``.
+    ``{"dtypes": (...), "routing": "host"|"in_graph", "chunked": bool,
+    "shardable": bool}``; routers report their own declared metadata with
+    ``chunked=False``.
     """
     cap = spec.capabilities
     return dict(dtypes=tuple(cap.dtypes), routing=cap.routing,
-                chunked=spec.execute_chunked is not None)
+                chunked=spec.execute_chunked is not None,
+                shardable=cap.shardable)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,6 +155,16 @@ class OpSpec:
         cache on a cold call (chunked executors build their chunk sets
         lazily *inside* the pipeline so cold inspection overlaps device
         execution — that is why build is not forced through ``inspect``).
+
+    ``shard_plan(cached, operands, cfg, *, mesh, **kw)`` (optional)
+        Sharded path, used when ``ReapRuntime.run`` receives a ``mesh``
+        (or the runtime's ``mesh_shape`` is set) and ``capabilities``
+        declares ``shardable=True``.  Mirrors ``execute_chunked``:
+        ``cached`` is the warm shard artifact or ``None``; returns
+        ``(result, stats, artifact)``.  The hook owns the partitioning
+        (``runtime/shard.py`` hosts the built-in implementations) and
+        must produce results bit-for-bit identical to the single-host
+        path — the conformance suite asserts exact equality.
 
     ``route(operands, cfg, routes_cache, **kw)`` (optional)
         Pure dispatch hook: return ``(concrete_tag, new_kw)``.  A spec
@@ -192,6 +213,7 @@ class OpSpec:
     inspect: Optional[Callable] = None
     execute_sync: Optional[Callable] = None
     execute_chunked: Optional[Callable] = None
+    shard_plan: Optional[Callable] = None
     route: Optional[Callable] = None
     prepare: Optional[Callable] = None
     serialize: Optional[Callable] = None
@@ -212,6 +234,12 @@ class OpSpec:
                     f"{'+'.join(REQUIRED_HOOKS)} (missing: "
                     f"{', '.join(missing)}), or be a pure router "
                     f"({ROUTER_HOOK}=...)")
+        if (self.shard_plan is not None) != self.capabilities.shardable:
+            raise ValueError(
+                f"op {self.tag!r}: shard_plan hook and "
+                f"capabilities.shardable must agree (hook "
+                f"{'set' if self.shard_plan is not None else 'missing'}, "
+                f"shardable={self.capabilities.shardable})")
         if not self.fingerprint_ops:
             object.__setattr__(self, "fingerprint_ops", (self.tag,))
 
@@ -253,6 +281,7 @@ def _ensure_builtin_ops() -> None:
         import repro.kernels.bsr_spmm      # noqa: F401  spmm
         import repro.kernels.flash_attention  # noqa: F401  block_attention
         import repro.core.solver           # noqa: F401  spmv
+        import repro.runtime.shard         # noqa: F401  sharded_plan type
         _BUILTINS_LOADED = True
 
 

@@ -23,7 +23,14 @@ organized.  This module makes plans durable: a directory holding
   * ``plans/<key>.npz`` — the plan/chunk set through ``serialize_plan``
     (compressed, ``allow_pickle=False`` on load).
 
-Durability discipline:
+With a :class:`~repro.runtime.shared_store.SharedBlobs` attached, the
+payload instead lives once per *content* under the fleet-shared
+``blobs/<sha256>`` layout and the manifest entry holds a
+``blob:<sha256>`` ref — many processes, one plan namespace (see
+shared_store.py for the refcounted GC and its safety argument).
+
+Durability discipline (implemented in ``shared_store.StoreBase``, shared
+with the executable store):
 
   * **atomic writes** — payloads and the manifest are written to a temp
     file in the same directory and ``os.replace``d, so a crash mid-write
@@ -51,15 +58,11 @@ CLI (``python -m repro.runtime.plan_store``)::
 """
 from __future__ import annotations
 
-import contextlib
 import dataclasses
 import hashlib
 import io
 import json
-import os
-import threading
 import time
-from pathlib import Path
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -68,16 +71,11 @@ from repro.core.inspector import PatternFingerprint
 
 from . import ops as _ops
 from .plan_cache import deserialize_plan   # default payload deserializer
+from .shared_store import (LOCKFILE, MANIFEST,  # noqa: F401  (re-exported
+                           SCHEMA_VERSION, SharedBlobs,  # store contract)
+                           StoreBase, fcntl)
 
-try:
-    import fcntl
-except ImportError:                      # non-POSIX: lockless best-effort
-    fcntl = None
-
-SCHEMA_VERSION = 1
-MANIFEST = "manifest.json"
 PLANS_DIR = "plans"
-LOCKFILE = "manifest.lock"
 
 
 # ---------------------------------------------------------------------------
@@ -225,7 +223,7 @@ class StoreStats:
     #                      cost the benchmark compares against inspection)
 
 
-class PlanStore:
+class PlanStore(StoreBase):
     """Disk spill/load for inspector plans, keyed by pattern fingerprint.
 
     Thread-safe within a process.  Across processes, payload files are
@@ -237,126 +235,28 @@ class PlanStore:
     a short timeout and falls through to the old best-effort in-memory
     behavior on contention (or on platforms without ``fcntl``): a lost
     entry is re-persisted by the next write-through, never corrupted.
-    ``byte_budget=None`` disables the disk LRU.
+    ``byte_budget=None`` disables the disk LRU.  ``shared`` (a
+    ``SharedBlobs``) switches payloads to the fleet-shared
+    content-addressed layout.
     """
 
-    #: seconds to wait for the cross-process manifest lock before falling
-    #: through to an unmerged (in-memory-view) write
-    lock_timeout: float = 2.0
+    payload_dir_name = PLANS_DIR
+    payload_suffix = ".npz"
 
     def __init__(self, root, byte_budget: Optional[int] = 1 << 30,
-                 compress: bool = False):
-        self.root = Path(root)
-        self.byte_budget = byte_budget
+                 compress: bool = False,
+                 shared: Optional[SharedBlobs] = None):
+        super().__init__(root, byte_budget, StoreStats(), shared=shared)
         # uncompressed by default: a warm restart's win is load latency,
         # and the byte-budget gc already bounds the disk footprint
         self.compress = compress
-        self.stats = StoreStats()
-        self._entries: Optional[Dict[str, dict]] = None   # lazy manifest
         self._last_flush = 0.0          # throttles last_used persistence
-        self._lock = threading.Lock()
-
-    @contextlib.contextmanager
-    def _manifest_flock(self, timeout: Optional[float] = None):
-        """Advisory cross-process lock around manifest read-modify-write.
-
-        Yields True when the flock was acquired — the caller must then
-        drop its cached manifest view (``self._entries = None``) so the
-        merge sees entries committed by other processes.  Yields False on
-        timeout/unsupported platforms; callers proceed best-effort (the
-        pre-lock behavior).  Lock order is flock OUTER, ``self._lock``
-        inner — everywhere — so a contended flock spin never stalls this
-        process's other store readers, and mixed orders can't deadlock
-        two threads of one process (same-process flocks on separate fds
-        do conflict).
-        """
-        if fcntl is None:
-            yield False
-            return
-        timeout = self.lock_timeout if timeout is None else timeout
-        try:
-            self.root.mkdir(parents=True, exist_ok=True)
-            fh = open(self.root / LOCKFILE, "a+")
-        except OSError:
-            yield False
-            return
-        got = False
-        deadline = time.monotonic() + timeout
-        try:
-            while True:
-                try:
-                    fcntl.flock(fh, fcntl.LOCK_EX | fcntl.LOCK_NB)
-                    got = True
-                    break
-                except OSError:
-                    if time.monotonic() >= deadline:
-                        break
-                    time.sleep(0.02)
-            yield got
-        finally:
-            if got:
-                try:
-                    fcntl.flock(fh, fcntl.LOCK_UN)
-                except OSError:
-                    pass
-            fh.close()
-
-    # -- manifest ----------------------------------------------------------
 
     @property
-    def _plans(self) -> Path:
-        return self.root / PLANS_DIR
-
-    def _manifest_path(self) -> Path:
-        return self.root / MANIFEST
-
-    def _load_manifest_locked(self) -> Dict[str, dict]:
-        """Lazy manifest read; anything unusable is moved aside, not fatal."""
-        if self._entries is not None:
-            return self._entries
-        path = self._manifest_path()
-        entries: Dict[str, dict] = {}
-        try:
-            data = json.loads(path.read_text())
-            if data.get("schema") != SCHEMA_VERSION:
-                raise ValueError(f"manifest schema {data.get('schema')!r} != "
-                                 f"{SCHEMA_VERSION}")
-            entries = dict(data["entries"])
-        except FileNotFoundError:
-            pass
-        except Exception:
-            # corrupt json / wrong schema / wrong shape: rebuild from empty
-            self.stats.corrupt += 1
-            try:
-                path.replace(path.with_suffix(".corrupt"))
-            except OSError:
-                pass
-        self._entries = entries
-        return entries
-
-    def _write_manifest_locked(self) -> None:
-        self.root.mkdir(parents=True, exist_ok=True)
-        payload = json.dumps({"schema": SCHEMA_VERSION,
-                              "entries": self._entries or {}},
-                             sort_keys=True, indent=1)
-        tmp = self._manifest_path().with_name(
-            f".{MANIFEST}.tmp-{os.getpid()}")
-        tmp.write_text(payload)
-        os.replace(tmp, self._manifest_path())
-
-    def _drop_locked(self, key: str) -> None:
-        ent = (self._entries or {}).pop(key, None)
-        if ent is not None:
-            try:
-                (self._plans / ent["payload"]).unlink()
-            except OSError:
-                pass
+    def _plans(self):
+        return self._payload_dir
 
     # -- core API ----------------------------------------------------------
-
-    def __len__(self) -> int:
-        with self._lock:
-            return len(self._load_manifest_locked())
 
     def __contains__(self, fp: PatternFingerprint) -> bool:
         with self._lock:
@@ -375,7 +275,7 @@ class PlanStore:
             ent = self._load_manifest_locked().get(key)
             if ent is None:
                 return None
-            path = self._plans / ent["payload"]
+            path = self._payload_path(ent)
         try:
             blob = path.read_bytes()
             if hashlib.sha256(blob).hexdigest() != ent["sha256"]:
@@ -383,6 +283,7 @@ class PlanStore:
             plan = _load_payload(blob, _ops.deserializer_for(fp.op))
         except Exception:
             self.stats.corrupt += 1
+            self._discard_corrupt_payload(ent)
             with self._manifest_flock() as locked:
                 with self._lock:
                     if locked:
@@ -458,6 +359,7 @@ class PlanStore:
             save = np.savez_compressed if self.compress else np.savez
             save(buf, **_pack_payload(serialize(plan)))
             blob = buf.getvalue()
+            sha = hashlib.sha256(blob).hexdigest()
             with self._manifest_flock() as locked:
                 with self._lock:
                     if locked:
@@ -467,16 +369,14 @@ class PlanStore:
                         # makes it atomic)
                         self._entries = None
                     entries = self._load_manifest_locked()
-                    self._plans.mkdir(parents=True, exist_ok=True)
-                    tmp = self._plans / f".{key}.npz.tmp-{os.getpid()}"
-                    tmp.write_bytes(blob)
-                    os.replace(tmp, self._plans / f"{key}.npz")
+                    payload_ref = self._persist_payload_locked(key, blob,
+                                                               sha)
                     now = time.time()
                     entries[key] = {
                         "fingerprint": fingerprint_to_json(fp),
                         "op": fp.op,
-                        "payload": f"{key}.npz",
-                        "sha256": hashlib.sha256(blob).hexdigest(),
+                        "payload": payload_ref,
+                        "sha256": sha,
                         "bytes": len(blob),
                         "saved_at": now,
                         "last_used": now}
@@ -495,55 +395,6 @@ class PlanStore:
 
     # -- maintenance -------------------------------------------------------
 
-    def _gc_locked(self, byte_budget: Optional[int],
-                   sweep: bool = False) -> List[str]:
-        entries = self._load_manifest_locked()
-        evicted: List[str] = []
-        if byte_budget is not None:
-            total = sum(int(e["bytes"]) for e in entries.values())
-            for key, _ in sorted(entries.items(),
-                                 key=lambda kv: kv[1]["last_used"]):
-                if total <= byte_budget:
-                    break
-                total -= int(entries[key]["bytes"])
-                self._drop_locked(key)
-                evicted.append(key)
-        # the orphan sweep runs only from explicit maintenance (gc()/
-        # verify(prune)/clear()), never from write-through puts: a put-time
-        # sweep against a stale manifest view would delete payloads (and
-        # in-flight temp files) that a *concurrent* writer owns
-        if sweep and self._plans.is_dir():
-            owned = {e["payload"] for e in entries.values()}
-            now = time.time()
-            for f in self._plans.iterdir():
-                if f.name in owned:
-                    continue
-                try:
-                    # leave recent temp files alone — they may be another
-                    # process's write between tmp-write and os.replace
-                    if f.name.startswith(".") and \
-                            now - f.stat().st_mtime < 3600:
-                        continue
-                    f.unlink()
-                except OSError:
-                    pass
-        self.stats.evicted += len(evicted)
-        return evicted
-
-    def gc(self, byte_budget: Optional[int] = None) -> List[str]:
-        """Evict LRU entries beyond the byte budget; sweep orphan files."""
-        with self._manifest_flock():
-            with self._lock:
-                # re-read the manifest so the sweep sees entries committed
-                # by other processes since ours was loaded (done locked or
-                # not: maintenance always acts on the freshest view)
-                self._entries = None
-                evicted = self._gc_locked(
-                    self.byte_budget if byte_budget is None
-                    else byte_budget, sweep=True)
-                self._write_manifest_locked()
-        return evicted
-
     def verify(self, prune: bool = False) -> dict:
         """Check every payload against its manifest digest.
 
@@ -555,17 +406,14 @@ class PlanStore:
         ok, corrupt = [], []
         for key, ent in entries.items():
             try:
-                blob = (self._plans / ent["payload"]).read_bytes()
+                blob = self._payload_path(ent).read_bytes()
                 if hashlib.sha256(blob).hexdigest() != ent["sha256"]:
                     raise ValueError("digest mismatch")
                 _load_payload(blob, _ops.deserializer_for(ent.get("op", "")))
                 ok.append(key)
             except Exception:
                 corrupt.append(key)
-        owned = {e["payload"] for e in entries.values()}
-        orphans = ([f.name for f in self._plans.iterdir()
-                    if f.name not in owned]
-                   if self._plans.is_dir() else [])
+        orphans = self._orphans(entries)
         if prune and (corrupt or orphans):
             with self._manifest_flock():
                 with self._lock:
@@ -575,16 +423,6 @@ class PlanStore:
                     self._write_manifest_locked()
             self.stats.corrupt += len(corrupt)
         return {"ok": ok, "corrupt": corrupt, "orphans": orphans}
-
-    def clear(self) -> None:
-        with self._manifest_flock():
-            with self._lock:
-                self._entries = None    # clear the freshest on-disk view
-                self._load_manifest_locked()
-                for key in list(self._entries or {}):
-                    self._drop_locked(key)
-                self._gc_locked(0, sweep=True)
-                self._write_manifest_locked()
 
     def summary(self) -> dict:
         with self._lock:
